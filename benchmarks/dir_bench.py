@@ -1,0 +1,84 @@
+"""Paper Fig. 5 + Fig. 6: distributed information retrieval.
+
+Fig 5: Boolean-retrieval recall CDFs on two corpora (Wikipedia/CCNews
+analogues).  Fig 6: speedups + mean recall at 25/50/75% and ranked
+P@10 vs SRCS.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, pick_query_words, text_setup
+
+
+def _boolean_queries(corpus, n, rng):
+    from repro.core.queries.retrieval import parse_boolean
+    out = []
+    for _ in range(n):
+        k = max(2, int(round(rng.normal(3, 1))))
+        words = pick_query_words(corpus, k, rng)
+        tokens = [int(words[0])]
+        for w in words[1:]:
+            tokens.append("and" if rng.random() < 0.5 else "or")
+            tokens.append(int(w))
+        out.append(parse_boolean(tokens))
+    return out
+
+
+def run(n_queries=30, rates=(0.25, 0.50, 0.75), verbose=True):
+    from repro.core.queries.retrieval import (
+        boolean_query, precision_at_k, ranked_query, recall)
+
+    for tag, seed in (("wiki", 0), ("ccnews", 7)):
+        setup = text_setup(tag=tag, seed=seed)
+        corpus, index = setup["corpus"], setup["index"]
+        rng = np.random.default_rng(13 + seed)
+        queries = _boolean_queries(corpus, n_queries, rng)
+
+        full = {}
+        t0 = time.perf_counter()
+        for i, q in enumerate(queries):
+            full[i] = boolean_query(corpus, index, q, 1.0).doc_ids
+        precise_s = (time.perf_counter() - t0) / max(len(queries), 1)
+
+        for rate in rates:
+            for method in ("emapprox", "srcs"):
+                recs, ts = [], []
+                for i, q in enumerate(queries):
+                    r = boolean_query(corpus, index, q, rate,
+                                      method=method, rng=rng)
+                    recs.append(recall(r.doc_ids, full[i]))
+                    ts.append(r.elapsed_s)
+                us = np.mean(ts) * 1e6
+                p25, p50 = np.percentile(recs, [25, 50])
+                csv_row(f"fig5_boolean_{tag}_{method}_rate{rate}", us,
+                        f"recall_mean={np.mean(recs):.3f};"
+                        f"recall_p25={p25:.3f};recall_p50={p50:.3f};"
+                        f"speedup={precise_s/max(np.mean(ts),1e-9):.2f}x")
+
+    # ranked retrieval (paper reports Wikipedia only)
+    setup = text_setup(tag="wiki")
+    corpus, index = setup["corpus"], setup["index"]
+    rng = np.random.default_rng(29)
+    from repro.core.queries.retrieval import precision_at_k, ranked_query
+    word_sets = [pick_query_words(corpus, max(1, int(round(rng.normal(3, 1)))),
+                                  rng).tolist() for _ in range(n_queries)]
+    full = {i: ranked_query(corpus, index, ws, 1.0, k=10).doc_ids
+            for i, ws in enumerate(word_sets)}
+    for rate in rates:
+        for method in ("emapprox", "srcs"):
+            precs, ts = [], []
+            for i, ws in enumerate(word_sets):
+                r = ranked_query(corpus, index, ws, rate, k=10,
+                                 method=method, rng=rng)
+                precs.append(precision_at_k(r.doc_ids, full[i], 10))
+                ts.append(r.elapsed_s)
+            csv_row(f"fig6c_ranked_{method}_rate{rate}",
+                    np.mean(ts) * 1e6,
+                    f"p_at_10={np.mean(precs):.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Paper Fig. 7: approximate user-centric collaborative filtering.
+
+Per the paper's protocol: hold out 20% of each test user's ratings,
+predict them from a sampled neighborhood, report MSE and P@10 vs the
+precise (rate=1.0) execution, EmApprox vs SRCS.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, review_setup
+
+
+def run(n_test_users=40, rates=(0.10, 0.25, 0.50), verbose=True):
+    from repro.core.queries.recommend import (
+        mse as rec_mse, precision_at_k, recommend_query)
+
+    setup = review_setup()
+    data, corpus, index = setup["data"], setup["corpus"], setup["index"]
+    rng = np.random.default_rng(17)
+    users = rng.choice(data.user_topics.shape[0], n_test_users,
+                       replace=False)
+
+    # hold out 20% of each user's ratings as test
+    holdout = {}
+    for u in users:
+        mask = data.user_of == u
+        items = data.item_of[mask]
+        ratings = data.ratings[mask]
+        k = max(1, int(0.2 * len(items)))
+        sel = rng.choice(len(items), k, replace=False)
+        holdout[u] = (items[sel], ratings[sel], items)
+
+    def evaluate(rate, method):
+        mses, precs, ts = [], [], []
+        for u in users:
+            t_items, t_ratings, bought = holdout[u]
+            r = recommend_query(corpus, index, data, int(u), rate,
+                                k=10, method=method, rng=rng,
+                                exclude_items=np.setdiff1d(bought, t_items))
+            mses.append(rec_mse(r.predictions, t_items, t_ratings))
+            precs.append(precision_at_k(r.top_k, t_items, 10))
+            ts.append(r.elapsed_s)
+        return float(np.nanmean(mses)), float(np.mean(precs)), np.mean(ts)
+
+    m_p, p_p, t_p = evaluate(1.0, "emapprox")
+    csv_row("fig7_precise", t_p * 1e6, f"mse={m_p:.3f};p_at_10={p_p:.3f}")
+    for rate in rates:
+        for method in ("emapprox", "srcs"):
+            m, p, t = evaluate(rate, method)
+            csv_row(f"fig7_{method}_rate{rate}", t * 1e6,
+                    f"mse={m:.3f};p_at_10={p:.3f};"
+                    f"speedup={t_p/max(t,1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    run()

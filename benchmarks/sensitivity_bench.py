@@ -1,0 +1,91 @@
+"""Paper Fig. 8 + Fig. 9: sensitivity to lambda1 (PV-DBOW dim),
+lambda2 (LSH bits), k (k-means clusters) — plus our beta (scoring
+temperature) as the beyond-paper knob."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, pick_query_words, text_setup
+
+
+def _agg_error(corpus, index, words, rate, rng, trials=2):
+    from repro.core.queries.aggregation import (
+        phrase_count_query, precise_phrase_count)
+    errs = []
+    for w in words:
+        true = precise_phrase_count(corpus, [int(w)])
+        if true == 0:
+            continue
+        for _ in range(trials):
+            r = phrase_count_query(corpus, index, [int(w)], rate, rng=rng)
+            errs.append(abs(r.estimate.value - true) / true)
+    return float(np.mean(errs))
+
+
+def run(verbose=True):
+    from repro.core.index import build_index
+    from repro.core.lsh import LSHConfig
+
+    rng = np.random.default_rng(31)
+
+    # fig8a/b: PV-DBOW dimension (lambda1)
+    for dim in (16, 32, 64, 100):
+        setup = text_setup(tag=f"dim{dim}", dim=dim, steps=1200,
+                           n_docs=2000)
+        corpus, index = setup["corpus"], setup["index"]
+        words = pick_query_words(corpus, 12, rng)
+        err = _agg_error(corpus, index, words, 0.10, rng)
+        csv_row(f"fig8a_dim{dim}", 0.0, f"agg_rel_err@10%={err:.3f}")
+
+    # fig8c/d: LSH bits (lambda2), same model, re-hash only
+    setup = text_setup(tag="wiki")
+    corpus, model, beta = setup["corpus"], setup["model"], \
+        setup["pv_cfg"].temperature
+    words = pick_query_words(corpus, 12, rng)
+    real_idx = build_index(corpus, model, LSHConfig(bits=256),
+                           use_lsh=False, temperature=beta)
+    err_real = _agg_error(corpus, real_idx, words, 0.10, rng)
+    csv_row("fig8c_realvalued", 0.0, f"agg_rel_err@10%={err_real:.3f}")
+    for bits in (32, 64, 128, 256, 512):
+        for mode in ("sym", "asym"):
+            idx = build_index(corpus, model, LSHConfig(bits=bits),
+                              temperature=beta, lsh_mode=mode)
+            err = _agg_error(corpus, idx, words, 0.10, rng)
+            csv_row(f"fig8c_bits{bits}_{mode}", 0.0,
+                    f"agg_rel_err@10%={err:.3f}")
+
+    # beyond-paper: scoring temperature beta
+    for beta_s in (1.0, 4.0, 8.0, 12.0):
+        idx = build_index(corpus, model, LSHConfig(bits=256),
+                          temperature=beta_s)
+        err = _agg_error(corpus, idx, words, 0.10, rng)
+        csv_row(f"fig8x_beta{beta_s}", 0.0, f"agg_rel_err@10%={err:.3f}")
+
+    # fig9: number of k-means clusters (ranked retrieval P@10)
+    from repro.core.allocation import KMeansConfig, spherical_kmeans
+    from repro.core.queries.retrieval import precision_at_k, ranked_query
+    setup_nk = text_setup(tag="wiki", kmeans=False)
+    corpus0, model0 = setup_nk["corpus"], setup_nk["model"]
+    pre = build_index(corpus0, model0, LSHConfig(bits=256),
+                      use_lsh=False, temperature=beta)
+    n_shards = corpus0.n_shards
+    for frac in (0.25, 0.5, 1.0):
+        k = max(2, int(n_shards * frac))
+        assign, _ = spherical_kmeans(pre.doc_vecs, KMeansConfig(n_clusters=k))
+        # map k clusters onto n_shards shards round-robin
+        corpus_k = corpus0.reallocate(assign % n_shards, n_shards)
+        idx = build_index(corpus_k, model0, LSHConfig(bits=256),
+                          temperature=beta)
+        word_sets = [pick_query_words(corpus_k, 3, rng).tolist()
+                     for _ in range(10)]
+        precs = []
+        for ws in word_sets:
+            full = ranked_query(corpus_k, idx, ws, 1.0, k=10).doc_ids
+            r = ranked_query(corpus_k, idx, ws, 0.25, k=10, rng=rng)
+            precs.append(precision_at_k(r.doc_ids, full, 10))
+        csv_row(f"fig9_kfrac{frac}", 0.0,
+                f"ranked_p10@25%={np.mean(precs):.3f};k={k}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Quickstart: build an EmApprox index and run one query of each type.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.allocation import allocate_corpus
+from repro.core.index import build_index
+from repro.core.lsh import LSHConfig
+from repro.core.pv_dbow import PVDBOWConfig, train_pv_dbow
+from repro.core.queries.aggregation import phrase_count_query, precise_phrase_count
+from repro.core.queries.retrieval import parse_boolean, boolean_query, ranked_query, recall
+from repro.data.corpus import SyntheticCorpusConfig, generate_text_corpus
+from repro.data.store import ShardedCorpus
+
+
+def main():
+    # 1. a corpus, partitioned into shards (the HDFS-block analogue)
+    print("== generating corpus ==")
+    ccfg = SyntheticCorpusConfig(n_docs=1500, vocab_size=2048, n_topics=12)
+    docs, _ = generate_text_corpus(ccfg)
+    corpus = ShardedCorpus.from_documents(docs, ccfg.vocab_size,
+                                          shard_tokens=4096)
+    print(f"   {corpus.n_docs} docs, {corpus.n_tokens:,} tokens, "
+          f"{corpus.n_shards} shards")
+
+    # 2. offline: learn PV-DBOW vectors, cluster, build the LSH index
+    print("== training PV-DBOW index (offline, paper Fig 2 p1-p2) ==")
+    pcfg = PVDBOWConfig(dim=32, steps=800, batch_pairs=4096, lr=0.01)
+    model = train_pv_dbow(corpus, pcfg)
+    pre = build_index(corpus, model, LSHConfig(bits=128), use_lsh=False,
+                      temperature=pcfg.temperature)
+    corpus = allocate_corpus(corpus, pre.doc_vecs)   # spherical k-means
+    index = build_index(corpus, model, LSHConfig(bits=256),
+                        temperature=pcfg.temperature)
+    print(f"   index: {index.nbytes()/1024:.0f} KiB for "
+          f"{corpus.n_tokens*4/1024:.0f} KiB of tokens")
+
+    rng = np.random.default_rng(0)
+    counts = np.bincount(np.concatenate([s.tokens for s in corpus.shards]),
+                         minlength=ccfg.vocab_size)
+    w1, w2 = np.argsort(-counts)[[60, 90]]
+
+    # 3a. aggregation query with error bounds (paper Eq 1-2)
+    print("== aggregation: phrase count at 10% sampling ==")
+    res = phrase_count_query(corpus, index, [int(w1)], rate=0.10, rng=rng)
+    true = precise_phrase_count(corpus, [int(w1)])
+    print(f"   estimate {res.estimate.value:,.0f} ± {res.estimate.error_bound:,.0f} "
+          f"(95% CI), true {true:,}, read {res.shards_read}/{res.n_shards} shards")
+
+    # 3b. Boolean retrieval
+    print("== boolean retrieval at 50% sampling ==")
+    expr = parse_boolean([int(w1), "or", int(w2)])
+    full = boolean_query(corpus, index, expr, 1.0)
+    approx = boolean_query(corpus, index, expr, 0.5, rng=rng)
+    print(f"   {len(approx.doc_ids)}/{len(full.doc_ids)} docs retrieved "
+          f"(recall {recall(approx.doc_ids, full.doc_ids):.2f})")
+
+    # 3c. ranked retrieval (BM25 over the sample)
+    print("== ranked retrieval (BM25) at 50% sampling ==")
+    fullr = ranked_query(corpus, index, [int(w1), int(w2)], 1.0, k=5)
+    appr = ranked_query(corpus, index, [int(w1), int(w2)], 0.5, k=5, rng=rng)
+    overlap = len(set(appr.doc_ids) & set(fullr.doc_ids))
+    print(f"   top-5 overlap with precise execution: {overlap}/5")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""EmApprox core: the paper's contribution as a composable JAX library.
+
+Layers (DESIGN.md Sec. 1):
+  pv_dbow     - PV-DBOW embedding model + negative-sampling training (C1, C2)
+  lsh         - random-hyperplane signatures, packed Hamming similarity (C4)
+  sampling    - pps / SRCS cluster sampling + Horvitz-Thompson estimators (C3)
+  index       - the approximation index: vectors + LSH + corpus stats (C1)
+  allocation  - spherical k-means document allocation (C6)
+  queries/    - aggregation, Boolean/ranked retrieval, recommendation (C5)
+"""
+from repro.core.pv_dbow import PVDBOWConfig, PVDBOWModel, train_pv_dbow  # noqa: F401
+from repro.core.lsh import LSHConfig, LSHIndex, pack_bits, hamming_similarity  # noqa: F401
+from repro.core.sampling import (  # noqa: F401
+    SampleResult,
+    pps_sample,
+    srcs_sample,
+    ht_estimate,
+)
+from repro.core.index import ApproxIndex, build_index  # noqa: F401

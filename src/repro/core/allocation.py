@@ -1,0 +1,117 @@
+"""Document allocation via spherical k-means (paper Sec. IV-D).
+
+Clusters documents by cosine of their PV-DBOW vectors so semantically
+similar documents land in the same shard.  By the AM-GM argument in the
+paper, co-locating documents with similar p(w|d) pushes the shard-level
+p(w|s) (a geometric mean) toward its maximum, skewing phi_s(w) — which
+is what retrieval-style queries need.
+
+The assignment step (docs x centroids normalized dot + argmax) is the
+compute hot spot and has a Pallas kernel (kernels/kmeans); this module
+falls back to pure jnp.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class KMeansConfig:
+    n_clusters: int
+    iters: int = 25
+    seed: int = 3
+    balanced: bool = True   # cap cluster sizes so shards stay rectangular-ish
+    use_kernel: bool = False
+
+
+def _unit(x: jnp.ndarray) -> jnp.ndarray:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-8)
+
+
+def spherical_kmeans(
+    doc_vecs: np.ndarray,
+    cfg: KMeansConfig,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (assignment[n_docs] int64, centroids[k, dim] float32)."""
+    x = _unit(jnp.asarray(doc_vecs, jnp.float32))
+    n, dim = x.shape
+    k = cfg.n_clusters
+    key = jax.random.PRNGKey(cfg.seed)
+    init_ids = jax.random.choice(key, n, shape=(k,), replace=False)
+    centroids = x[init_ids]
+
+    if cfg.use_kernel:
+        from repro.kernels.kmeans import ops as kmeans_ops
+        assign_fn = lambda xx, cc: kmeans_ops.assign(xx, cc)
+    else:
+        @jax.jit
+        def assign_fn(xx, cc):
+            scores = xx @ cc.T            # cosine since both unit
+            return jnp.argmax(scores, axis=1).astype(jnp.int32)
+
+    @jax.jit
+    def update_fn(xx, assign):
+        sums = jax.ops.segment_sum(xx, assign, num_segments=k)
+        counts = jax.ops.segment_sum(jnp.ones((xx.shape[0],), jnp.float32), assign, num_segments=k)
+        new_c = sums / jnp.maximum(counts[:, None], 1.0)
+        # dead centroids keep their position (norm ~ 0 -> re-unit protects)
+        return _unit(jnp.where(counts[:, None] > 0, new_c, 0.0) +
+                     jnp.where(counts[:, None] > 0, 0.0, 1e-4))
+
+    assign = assign_fn(x, centroids)
+    for _ in range(cfg.iters):
+        centroids = update_fn(x, assign)
+        new_assign = assign_fn(x, centroids)
+        if bool(jnp.all(new_assign == assign)):
+            assign = new_assign
+            break
+        assign = new_assign
+
+    assign = np.asarray(assign, np.int64)
+    if cfg.balanced:
+        assign = _rebalance(np.asarray(x), np.asarray(centroids), assign, k)
+    return assign, np.asarray(centroids, np.float32)
+
+
+def _rebalance(x: np.ndarray, centroids: np.ndarray, assign: np.ndarray, k: int) -> np.ndarray:
+    """Greedy capacity rebalancing: clusters above ceil(n/k)*slack spill
+    their worst-fitting members to the nearest under-capacity cluster.
+    Keeps shard sizes within ~25% of uniform so no shard becomes a
+    straggler (runtime concern the paper's HDFS blocks got for free)."""
+    n = x.shape[0]
+    cap = int(np.ceil(n / k * 1.25))
+    scores = x @ centroids.T
+    order = np.argsort(-scores.max(axis=1))  # strongest members keep seats
+    counts = np.zeros(k, np.int64)
+    out = np.empty(n, np.int64)
+    pref = np.argsort(-scores, axis=1)
+    for i in order:
+        for c in pref[i]:
+            if counts[c] < cap:
+                out[i] = c
+                counts[c] += 1
+                break
+        else:  # all full (can't happen with slack>1, but be safe)
+            c = int(np.argmin(counts))
+            out[i] = c
+            counts[c] += 1
+    return out
+
+
+def allocate_corpus(corpus, index_doc_vecs: np.ndarray, n_shards: Optional[int] = None,
+                    cfg: Optional[KMeansConfig] = None):
+    """Convenience: cluster + reallocate, returning the new corpus.
+
+    Paper Sec. VII-A sets n_clusters = number of HDFS blocks; we default
+    to the current shard count."""
+    n_shards = n_shards or corpus.n_shards
+    cfg = cfg or KMeansConfig(n_clusters=n_shards)
+    if cfg.n_clusters != n_shards:
+        cfg = dataclasses.replace(cfg, n_clusters=n_shards)
+    assign, _ = spherical_kmeans(index_doc_vecs, cfg)
+    return corpus.reallocate(assign, n_shards)

@@ -1,0 +1,276 @@
+"""PV-DBOW (Paragraph Vector, distributed bag of words) in JAX.
+
+The paper (Sec. II-C) uses PV-DBOW with window = document length, i.e.
+every (document, word) occurrence is a training pair.  Negative sampling
+with k noise words factorizes the shifted PMI matrix (Levy-Goldberg,
+Eq 4), which is what makes ``exp(q . d) proportional to p(q|d)`` (Eq 5)
+— the theoretical basis of the whole index.
+
+TPU adaptation (DESIGN.md Sec. 2): Gensim's hogwild SGD becomes
+synchronous data-parallel Adam-free SGNS with large batches.  The fused
+gather->dot->sigmoid->scatter-add step has a Pallas kernel
+(kernels/negsamp); this module provides the pure-jnp reference path and
+the training loop.
+
+Paper modification for LSH (Sec. III-B): vectors are re-normalized to
+unit length at each update step so dot product == cosine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.store import ShardedCorpus
+
+
+@dataclasses.dataclass(frozen=True)
+class PVDBOWConfig:
+    dim: int = 64                 # lambda_1 in the paper (default 100 there)
+    negatives: int = 5            # k in Eq 4
+    lr: float = 0.05
+    steps: int = 1500
+    batch_pairs: int = 8192
+    noise_power: float = 0.75     # unigram^0.75 noise distribution
+    unit_norm: bool = True        # paper's modification for LSH-cosine
+    subsample_t: float = 1e-3     # word2vec frequent-word subsampling threshold
+    # Temperature inside the SGNS sigmoid: sigma(beta * cos).  With the
+    # paper's per-step unit-norm projection, dots are capped at [-1, 1];
+    # sigma(-1) = 0.27 never decays, so negative-sample repulsion never
+    # equilibrates and the tables collapse (all words at one point, all
+    # docs at the antipode — measured).  With beta, equilibrium sits at
+    # cos = (PMI - log k) / beta, i.e. the Levy-Goldberg factorization
+    # survives, just compressed by 1/beta; scoring exponentiates with
+    # the same beta (exp(beta cos)) so Eq 5's proportionality to p(w|d)
+    # is restored exactly.
+    temperature: float = 8.0
+    seed: int = 0
+    use_kernel: bool = False      # route the update through kernels/negsamp
+
+
+class PVDBOWModel(NamedTuple):
+    word_vecs: jax.Array   # [V, dim]
+    doc_vecs: jax.Array    # [n_docs, dim]
+
+    @property
+    def dim(self) -> int:
+        return self.word_vecs.shape[1]
+
+
+class CorpusPairs(NamedTuple):
+    """Flat (doc, word) training pairs + the negative-sampling noise law.
+
+    ``noise_cdf`` is the cumulative unigram^power distribution; negatives
+    are drawn by inverse-CDF (searchsorted) which costs O(B k log V)
+    instead of the O(B k V) a naive categorical would (that Gumbel path
+    materializes a [B, k, V] tensor — measured pathological on CPU and
+    wasteful on TPU)."""
+    doc_of_token: np.ndarray   # int32 [total_tokens]
+    word_of_token: np.ndarray  # int32 [total_tokens]
+    noise_cdf: np.ndarray      # float32 [V] cumulative noise distribution
+
+
+def corpus_pairs(
+    corpus: ShardedCorpus,
+    noise_power: float = 0.75,
+    subsample_t: float = 1e-3,
+    seed: int = 0,
+) -> CorpusPairs:
+    """Extract (doc, word) pairs with word2vec frequent-word subsampling.
+
+    Subsampling (Mikolov et al.: keep prob = sqrt(t/f) for frequency f)
+    removes most stopword-like mass.  Without it the shared high-
+    frequency words dominate the gradient and drag every document vector
+    in the same direction — the classic global-offset collapse that
+    flattens exp(cos) similarities."""
+    docs, words = [], []
+    for shard in corpus.shards:
+        lens = np.diff(shard.offsets)
+        docs.append(np.repeat(shard.doc_ids.astype(np.int32), lens))
+        words.append(shard.tokens)
+    word_of_token = np.concatenate(words)
+    doc_of_token = np.concatenate(docs)
+
+    counts = np.bincount(word_of_token, minlength=corpus.vocab_size).astype(np.float64)
+    if subsample_t > 0:
+        freq = counts / counts.sum()
+        with np.errstate(divide="ignore", invalid="ignore"):
+            keep_p = np.sqrt(subsample_t / np.maximum(freq, 1e-12))
+        keep_p = np.clip(keep_p, 0.0, 1.0)
+        rng = np.random.default_rng(seed)
+        keep = rng.random(word_of_token.shape[0]) < keep_p[word_of_token]
+        if keep.sum() > 1024:  # don't subsample tiny corpora into nothing
+            word_of_token = word_of_token[keep]
+            doc_of_token = doc_of_token[keep]
+
+    p = counts ** noise_power
+    p /= p.sum()
+    return CorpusPairs(doc_of_token, word_of_token,
+                       np.cumsum(p).astype(np.float32))
+
+
+def sample_negatives(key: jax.Array, noise_cdf: jax.Array,
+                     shape) -> jax.Array:
+    """Inverse-CDF negative sampling: int32 ids with the unigram^power law."""
+    u = jax.random.uniform(key, shape)
+    ids = jnp.searchsorted(noise_cdf, u)
+    return jnp.clip(ids, 0, noise_cdf.shape[0] - 1).astype(jnp.int32)
+
+
+def init_model(key: jax.Array, vocab_size: int, n_docs: int, dim: int) -> PVDBOWModel:
+    kw, kd = jax.random.split(key)
+    scale = 1.0 / np.sqrt(dim)
+    w = jax.random.normal(kw, (vocab_size, dim), jnp.float32) * scale
+    d = jax.random.normal(kd, (n_docs, dim), jnp.float32) * scale
+    return PVDBOWModel(_unit_rows(w), _unit_rows(d))
+
+
+def _unit_rows(x: jax.Array) -> jax.Array:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-8)
+
+
+def sgns_loss(
+    model: PVDBOWModel,
+    doc_ids: jax.Array,     # int32 [B]
+    word_ids: jax.Array,    # int32 [B]
+    neg_ids: jax.Array,     # int32 [B, k]
+    temperature: float = 1.0,
+) -> jax.Array:
+    """Skip-gram-with-negative-sampling loss, document as context.
+
+    L = -log sigma(w.d) - sum_neg log sigma(-w'.d)   (Eq 3/4 approximation)
+
+    SUM reduction over the batch (word2vec/hogwild semantics): each
+    sampled pair contributes an O(1) gradient to its embedding rows
+    regardless of batch size.  Mean reduction would shrink per-row
+    updates by 1/B and stall learning at large batch.
+    """
+    d = model.doc_vecs[doc_ids]              # [B, dim]
+    w = model.word_vecs[word_ids]            # [B, dim]
+    wn = model.word_vecs[neg_ids]            # [B, k, dim]
+    pos = jnp.einsum("bd,bd->b", w, d) * temperature
+    neg = jnp.einsum("bkd,bd->bk", wn, d) * temperature
+    # -log sigma(x) = softplus(-x); numerically stable
+    loss = jax.nn.softplus(-pos).sum() + jax.nn.softplus(neg).sum()
+    return loss
+
+
+@functools.partial(jax.jit, static_argnames=("negatives", "lr", "unit_norm", "temperature"))
+def sgns_step(
+    model: PVDBOWModel,
+    key: jax.Array,
+    doc_ids: jax.Array,
+    word_ids: jax.Array,
+    noise_cdf: jax.Array,
+    *,
+    negatives: int,
+    lr: float,
+    unit_norm: bool,
+    temperature: float = 1.0,
+) -> Tuple[PVDBOWModel, jax.Array]:
+    neg_ids = sample_negatives(key, noise_cdf, (doc_ids.shape[0], negatives))
+    loss, grads = jax.value_and_grad(sgns_loss)(
+        model, doc_ids, word_ids, neg_ids, temperature)
+    new_w = model.word_vecs - lr * grads.word_vecs
+    new_d = model.doc_vecs - lr * grads.doc_vecs
+    if unit_norm:
+        # Paper Sec III-B: renormalize each update so dot == cosine.
+        new_w = _unit_rows(new_w)
+        new_d = _unit_rows(new_d)
+    # report the per-pair mean for monitoring
+    return PVDBOWModel(new_w, new_d), loss / doc_ids.shape[0]
+
+
+def train_pv_dbow(
+    corpus: ShardedCorpus,
+    cfg: PVDBOWConfig,
+    *,
+    callback=None,
+) -> PVDBOWModel:
+    """Offline index-model training (paper Fig. 2 step p1)."""
+    pairs = corpus_pairs(corpus, cfg.noise_power, cfg.subsample_t, cfg.seed)
+    n_pairs = pairs.doc_of_token.shape[0]
+    key = jax.random.PRNGKey(cfg.seed)
+    model = init_model(key, corpus.vocab_size, corpus.n_docs, cfg.dim)
+    noise_cdf = jnp.asarray(pairs.noise_cdf)
+    rng = np.random.default_rng(cfg.seed)
+
+    if cfg.use_kernel:
+        from repro.kernels.negsamp import ops as negsamp_ops
+
+    for step in range(cfg.steps):
+        idx = rng.integers(0, n_pairs, size=cfg.batch_pairs)
+        doc_ids = jnp.asarray(pairs.doc_of_token[idx])
+        word_ids = jnp.asarray(pairs.word_of_token[idx])
+        key, sub = jax.random.split(key)
+        if cfg.use_kernel:
+            model, loss = negsamp_ops.negsamp_step(
+                model, sub, doc_ids, word_ids, noise_cdf,
+                negatives=cfg.negatives, lr=cfg.lr, unit_norm=cfg.unit_norm,
+                temperature=cfg.temperature,
+            )
+        else:
+            model, loss = sgns_step(
+                model, sub, doc_ids, word_ids, noise_cdf,
+                negatives=cfg.negatives, lr=cfg.lr, unit_norm=cfg.unit_norm,
+                temperature=cfg.temperature,
+            )
+        if callback is not None and (step % 100 == 0 or step == cfg.steps - 1):
+            callback(step, float(loss))
+    return model
+
+
+def infer_doc_vector(
+    model: PVDBOWModel,
+    tokens: np.ndarray,
+    cfg: PVDBOWConfig,
+    steps: int = 50,
+) -> jax.Array:
+    """Infer a vector for an unseen document with word vectors frozen
+    (paper Sec. V, model-drift mitigation)."""
+    key = jax.random.PRNGKey(cfg.seed + 1)
+    vec = _unit_rows(jax.random.normal(key, (1, cfg.dim), jnp.float32) / np.sqrt(cfg.dim))
+    tokens = jnp.asarray(tokens, jnp.int32)
+    vocab = model.word_vecs.shape[0]
+
+    @jax.jit
+    def one(vec, key):
+        def loss_fn(v):
+            w = model.word_vecs[tokens]
+            pos = w @ v[0] * cfg.temperature
+            kneg = jax.random.randint(key, (tokens.shape[0], cfg.negatives), 0, vocab)
+            wn = model.word_vecs[kneg]
+            neg = jnp.einsum("bkd,d->bk", wn, v[0]) * cfg.temperature
+            return jax.nn.softplus(-pos).mean() + jax.nn.softplus(neg).sum(-1).mean()
+        g = jax.grad(loss_fn)(vec)
+        v = vec - cfg.lr * g
+        return _unit_rows(v)
+
+    for _ in range(steps):
+        key, sub = jax.random.split(key)
+        vec = one(vec, sub)
+    return vec[0]
+
+
+def query_vector(model_or_words: jax.Array, word_ids: Sequence[int]) -> jax.Array:
+    """Paper Sec. III: q = elementwise sum of the query's word vectors."""
+    w = model_or_words if isinstance(model_or_words, (jax.Array, np.ndarray)) \
+        else model_or_words.word_vecs
+    return jnp.asarray(w)[jnp.asarray(list(word_ids), jnp.int32)].sum(axis=0)
+
+
+def shard_vectors(doc_vecs: jax.Array, corpus: ShardedCorpus) -> jax.Array:
+    """Paper Sec. III-A: subcollection vector = arithmetic mean of member
+    document vectors."""
+    out = []
+    dv = np.asarray(doc_vecs)
+    for shard in corpus.shards:
+        if shard.n_docs:
+            out.append(dv[shard.doc_ids].mean(axis=0))
+        else:
+            out.append(np.zeros(dv.shape[1], dv.dtype))
+    return jnp.asarray(np.stack(out))

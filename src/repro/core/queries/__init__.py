@@ -1,0 +1,6 @@
+"""The paper's three query families over one index (Table I)."""
+from repro.core.queries.aggregation import phrase_count_query, PhraseCountResult  # noqa: F401
+from repro.core.queries.retrieval import (  # noqa: F401
+    BoolExpr, boolean_query, ranked_query, parse_boolean,
+)
+from repro.core.queries.recommend import recommend_query, RecommendResult  # noqa: F401

@@ -1,0 +1,138 @@
+"""Cluster sampling + estimators (paper Sec. II-B, III-A).
+
+The estimator is Hansen-Hurwitz / pps-with-replacement (paper Eq 1):
+
+    tau_hat = (1/n) sum_{s in S} tau_s / phi_s
+
+with the variance estimate and t-based confidence interval of Eq 2.
+``phi_s`` comes either from similarity (EmApprox: Eq 11 softmax over
+exp(q . s)) or is uniform (SRCS baseline).  The math is identical for
+both — only the probability vector changes, which is exactly the paper's
+framing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from repro.utils.stats import t_critical_value
+
+
+class SampleResult(NamedTuple):
+    shard_ids: np.ndarray        # int64 [n] sampled shard ids (with replacement)
+    probabilities: np.ndarray    # float64 [n_shards] the phi vector used
+    rate: float                  # nominal sampling rate
+
+
+def similarity_probabilities(
+    similarities: np.ndarray,
+    floor: float = 1e-6,
+) -> np.ndarray:
+    """Paper Eq 11: phi_s = sim_s / sum(sim).  A small floor keeps every
+    shard selectable so the HT estimator stays unbiased (phi_s > 0)."""
+    s = np.asarray(similarities, np.float64)
+    s = np.maximum(s, 0.0) + floor
+    return s / s.sum()
+
+
+def pps_sample(
+    probabilities: np.ndarray,
+    rate: float,
+    rng: np.random.Generator,
+) -> SampleResult:
+    """Probability-proportional-to-size sampling with replacement.
+
+    ``rate`` maps to a sample size n = ceil(rate * n_shards), matching
+    the paper's 'block sampling rate'."""
+    p = np.asarray(probabilities, np.float64)
+    p = p / p.sum()
+    n_shards = p.shape[0]
+    n = max(1, int(np.ceil(rate * n_shards)))
+    ids = rng.choice(n_shards, size=n, replace=True, p=p)
+    return SampleResult(ids.astype(np.int64), p, rate)
+
+
+def srcs_sample(
+    n_shards: int,
+    rate: float,
+    rng: np.random.Generator,
+) -> SampleResult:
+    """Simple random cluster sampling (the paper's baseline)."""
+    p = np.full(n_shards, 1.0 / n_shards, np.float64)
+    n = max(1, int(np.ceil(rate * n_shards)))
+    ids = rng.choice(n_shards, size=n, replace=True, p=p)
+    return SampleResult(ids.astype(np.int64), p, rate)
+
+
+class Estimate(NamedTuple):
+    value: float          # tau_hat
+    error_bound: float    # epsilon at the requested confidence
+    confidence: float
+    n: int                # sample size
+
+    @property
+    def relative_error(self) -> float:
+        return self.error_bound / abs(self.value) if self.value else float("inf")
+
+    @property
+    def interval(self):
+        return (self.value - self.error_bound, self.value + self.error_bound)
+
+
+def ht_estimate(
+    local_values: np.ndarray,
+    sample: SampleResult,
+    confidence: float = 0.95,
+) -> Estimate:
+    """Paper Eq 1 & 2 over per-shard local results ``tau_s``.
+
+    ``local_values[i]`` is the exact local quantity computed on sampled
+    shard ``sample.shard_ids[i]`` (duplicates allowed — with-replacement
+    draws each count once, per Hansen-Hurwitz)."""
+    tau = np.asarray(local_values, np.float64)
+    phi = sample.probabilities[sample.shard_ids]
+    n = tau.shape[0]
+    scaled = tau / phi                      # tau_s / phi_s
+    tau_hat = scaled.mean() / 1.0
+    # Eq 1 has (1/n) sum, i.e. the mean of scaled values
+    if n > 1:
+        var_hat = np.sum((scaled - tau_hat) ** 2) / (n * (n - 1))
+        eps = t_critical_value(n - 1, confidence) * np.sqrt(var_hat)
+    else:
+        eps = float("inf")
+    return Estimate(float(tau_hat), float(eps), confidence, n)
+
+
+def mean_estimate(
+    local_sums: np.ndarray,
+    local_counts: np.ndarray,
+    sample: SampleResult,
+    confidence: float = 0.95,
+) -> Estimate:
+    """Ratio estimator for averages (the paper's second provided reduce
+    function): estimate sum and count jointly, report sum/count with a
+    linearized (Taylor) variance."""
+    sums = np.asarray(local_sums, np.float64)
+    counts = np.asarray(local_counts, np.float64)
+    phi = sample.probabilities[sample.shard_ids]
+    n = sums.shape[0]
+    s_hat = (sums / phi).mean()
+    c_hat = (counts / phi).mean()
+    if c_hat == 0:
+        return Estimate(0.0, float("inf"), confidence, n)
+    r = s_hat / c_hat
+    if n > 1:
+        resid = (sums - r * counts) / phi
+        var = np.sum((resid - resid.mean()) ** 2) / (n * (n - 1)) / (c_hat ** 2)
+        eps = t_critical_value(n - 1, confidence) * np.sqrt(max(var, 0.0))
+    else:
+        eps = float("inf")
+    return Estimate(float(r), float(eps), confidence, n)
+
+
+def unique_shards(sample: SampleResult) -> np.ndarray:
+    """Distinct shards to physically read (I/O dedup; estimator still
+    uses the with-replacement multiset)."""
+    return np.unique(sample.shard_ids)

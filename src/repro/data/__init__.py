@@ -1,0 +1,15 @@
+"""Data substrate: synthetic corpora, tokenizer, sharded document store,
+and the LM batch pipeline.
+
+The sharded store is the TPU-native analogue of the paper's HDFS-block
+layout: a shard (fixed token budget, rectangular arrays) is the cluster
+sampling unit, the unit of data placement and the unit of fault recovery.
+"""
+from repro.data.corpus import (  # noqa: F401
+    SyntheticCorpusConfig,
+    generate_text_corpus,
+    generate_review_corpus,
+)
+from repro.data.store import Document, DocShard, ShardedCorpus  # noqa: F401
+from repro.data.tokenizer import HashTokenizer, Vocab  # noqa: F401
+from repro.data.pipeline import LMBatchPipeline, SimilaritySampler  # noqa: F401

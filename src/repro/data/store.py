@@ -1,0 +1,200 @@
+"""Sharded document store — the HDFS-block analogue.
+
+Documents are stored CSR-style per shard: a flat int32 token array plus
+an int64 offsets array.  A shard is the cluster-sampling unit (paper
+Sec. II-B) and the unit of placement on the ``data`` mesh axis.
+
+The store supports *reallocation*: given a document→shard assignment
+(e.g. from spherical k-means, paper Sec. IV-D) it rebuilds shards so
+semantically similar documents are co-located.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator, List, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Document:
+    """A single document: token ids plus a stable global id."""
+    doc_id: int
+    tokens: np.ndarray  # int32 [len]
+
+    def __len__(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+@dataclasses.dataclass
+class DocShard:
+    """One subcollection of documents (CSR layout)."""
+    shard_id: int
+    tokens: np.ndarray       # int32 [total_tokens_in_shard]
+    offsets: np.ndarray      # int64 [n_docs + 1]
+    doc_ids: np.ndarray      # int64 [n_docs] global document ids
+
+    @property
+    def n_docs(self) -> int:
+        return int(self.doc_ids.shape[0])
+
+    @property
+    def n_tokens(self) -> int:
+        return int(self.tokens.shape[0])
+
+    def document(self, i: int) -> Document:
+        lo, hi = int(self.offsets[i]), int(self.offsets[i + 1])
+        return Document(int(self.doc_ids[i]), self.tokens[lo:hi])
+
+    def iter_documents(self) -> Iterator[Document]:
+        for i in range(self.n_docs):
+            yield self.document(i)
+
+    @staticmethod
+    def from_documents(shard_id: int, docs: Sequence[Document]) -> "DocShard":
+        if docs:
+            tokens = np.concatenate([d.tokens for d in docs]).astype(np.int32)
+            offsets = np.zeros(len(docs) + 1, np.int64)
+            np.cumsum([len(d) for d in docs], out=offsets[1:])
+            doc_ids = np.asarray([d.doc_id for d in docs], np.int64)
+        else:
+            tokens = np.zeros((0,), np.int32)
+            offsets = np.zeros((1,), np.int64)
+            doc_ids = np.zeros((0,), np.int64)
+        return DocShard(shard_id, tokens, offsets, doc_ids)
+
+
+class ShardedCorpus:
+    """A corpus partitioned into shards (subcollections).
+
+    ``shard_tokens`` is the target token budget per shard — the analogue
+    of the paper's 32 MB HDFS block size.
+    """
+
+    def __init__(self, shards: List[DocShard], vocab_size: int):
+        self.shards = shards
+        self.vocab_size = int(vocab_size)
+        self._doc_to_shard = None
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @staticmethod
+    def from_documents(
+        docs: Sequence[Document],
+        vocab_size: int,
+        shard_tokens: int = 1 << 18,
+    ) -> "ShardedCorpus":
+        """Sequential allocation: fill shards to the token budget in doc
+        order (the 'as-ingested' layout, before k-means reallocation)."""
+        shards: List[DocShard] = []
+        cur: List[Document] = []
+        cur_tokens = 0
+        for d in docs:
+            cur.append(d)
+            cur_tokens += len(d)
+            if cur_tokens >= shard_tokens:
+                shards.append(DocShard.from_documents(len(shards), cur))
+                cur, cur_tokens = [], 0
+        if cur:
+            shards.append(DocShard.from_documents(len(shards), cur))
+        return ShardedCorpus(shards, vocab_size)
+
+    def reallocate(self, assignment: np.ndarray, n_shards: int) -> "ShardedCorpus":
+        """Rebuild shards from a document→shard assignment vector indexed
+        by global doc_id (paper Sec. IV-D: cluster-based allocation)."""
+        buckets: List[List[Document]] = [[] for _ in range(n_shards)]
+        for shard in self.shards:
+            for doc in shard.iter_documents():
+                buckets[int(assignment[doc.doc_id])].append(doc)
+        shards = [DocShard.from_documents(i, b) for i, b in enumerate(buckets)]
+        return ShardedCorpus(shards, self.vocab_size)
+
+    # ------------------------------------------------------------------
+    # inspection
+    # ------------------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def n_docs(self) -> int:
+        return sum(s.n_docs for s in self.shards)
+
+    @property
+    def n_tokens(self) -> int:
+        return sum(s.n_tokens for s in self.shards)
+
+    def iter_documents(self) -> Iterator[Document]:
+        for s in self.shards:
+            yield from s.iter_documents()
+
+    def doc_shard_map(self) -> np.ndarray:
+        """Global doc_id → shard_id (cached)."""
+        if self._doc_to_shard is None:
+            out = np.full(self.n_docs, -1, np.int64)
+            for s in self.shards:
+                out[s.doc_ids] = s.shard_id
+            self._doc_to_shard = out
+        return self._doc_to_shard
+
+    def shard_doc_counts(self) -> np.ndarray:
+        return np.asarray([s.n_docs for s in self.shards], np.int64)
+
+    def shard_token_counts(self) -> np.ndarray:
+        return np.asarray([s.n_tokens for s in self.shards], np.int64)
+
+    # ------------------------------------------------------------------
+    # exact counting oracles (used by tests and precise execution)
+    # ------------------------------------------------------------------
+    def count_phrase(self, phrase: Sequence[int]) -> int:
+        """Exact number of occurrences of ``phrase`` in the corpus."""
+        return sum(count_phrase_in_shard(s, phrase) for s in self.shards)
+
+
+def count_phrase_in_shard(shard: DocShard, phrase: Sequence[int]) -> int:
+    """Occurrences of a token n-gram within a shard, never crossing
+    document boundaries."""
+    phrase = np.asarray(phrase, np.int32)
+    k = len(phrase)
+    if k == 0 or shard.n_tokens < k:
+        return 0
+    tokens = shard.tokens
+    if k == 1:
+        return int(np.count_nonzero(tokens == phrase[0]))
+    # vectorized n-gram match over the flat array
+    match = tokens[: len(tokens) - k + 1] == phrase[0]
+    for j in range(1, k):
+        match &= tokens[j: len(tokens) - k + 1 + j] == phrase[j]
+    if not match.any():
+        return 0
+    # kill matches that straddle a document boundary
+    pos = np.nonzero(match)[0]
+    doc_of_start = np.searchsorted(shard.offsets, pos, side="right") - 1
+    doc_of_end = np.searchsorted(shard.offsets, pos + k - 1, side="right") - 1
+    return int(np.count_nonzero(doc_of_start == doc_of_end))
+
+
+def segment_sum_by_offsets(values: np.ndarray, offsets: np.ndarray) -> np.ndarray:
+    """Per-document sums over a CSR layout.  Handles empty documents
+    anywhere (np.add.reduceat alone mis-handles empty segments and
+    raises when an empty doc sits at the end)."""
+    n_docs = len(offsets) - 1
+    if n_docs == 0:
+        return np.zeros(0, values.dtype)
+    total = values.shape[0]
+    starts = np.minimum(offsets[:-1], max(total - 1, 0))
+    if total == 0:
+        return np.zeros(n_docs, values.dtype)
+    seg = np.add.reduceat(values, starts)
+    lens = np.diff(offsets)
+    return np.where(lens > 0, seg, 0)
+
+
+def docs_matching_all(shard: DocShard, words: Sequence[int]) -> np.ndarray:
+    """Global doc_ids in ``shard`` containing *all* of ``words``."""
+    ok = np.ones(shard.n_docs, bool)
+    for w in words:
+        hit = (shard.tokens == np.int32(w)).astype(np.int64)
+        ok &= segment_sum_by_offsets(hit, shard.offsets) > 0
+    return shard.doc_ids[ok]

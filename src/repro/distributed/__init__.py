@@ -1,0 +1,9 @@
+"""Distribution layer: mesh axes, logical sharding rules, collective
+helpers, and gradient compression."""
+from repro.distributed.sharding import (  # noqa: F401
+    LOGICAL_RULES,
+    logical_to_mesh_spec,
+    shard_constraint,
+    set_rules,
+    get_rules,
+)

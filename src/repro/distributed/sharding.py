@@ -1,0 +1,176 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Models annotate tensors with *logical* axis names; a rules table maps
+them to mesh axes.  Changing parallelism = changing the table, never the
+model code.  The production mesh axes (launch/mesh.py):
+
+  pod    DP across pods (grad all-reduce crosses the pod axis only)
+  data   FSDP within a pod (params/opt sharded, gathered per layer)
+  model  TP / EP within a pod
+
+Default rules:
+  batch        -> ("pod", "data")   activations: batch sharded
+  vocab        -> "model"           embedding/logits TP
+  d_model      -> None              activations replicated on feature dim
+  heads        -> "model"           attention TP over query heads
+  kv_heads     -> "model"           GQA KV TP (GSPMD pads non-divisible)
+  q_dim/kv_dim -> "model"           fused projections (head*dim) TP
+  d_ff         -> "model"           MLP TP
+  experts      -> "model"           MoE EP
+  d_inner      -> "model"           SSM inner TP
+  fsdp         -> "data"            parameter FSDP axis (largest dim)
+  seq          -> None              (sequence parallelism: set to "model")
+  layers       -> None              scan axis, never sharded
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+LOGICAL_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "vocab": "model",
+    "d_model": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "q_dim": "model",
+    "kv_dim": "model",
+    "d_ff": "model",
+    "experts": "model",
+    "d_inner": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "head_dim": None,
+    "fsdp": "data",
+    "layers": None,
+    "enc_seq": None,
+    "img_seq": None,
+    # context parallelism inside chunked attention: the query-seq dim of
+    # the flash accumulator shards over model (kv-head counts rarely
+    # divide a 16-way axis; 32k sequences always do)
+    "attn_q_seq": "model",
+}
+
+_local = threading.local()
+
+
+def get_rules() -> Rules:
+    return getattr(_local, "rules", LOGICAL_RULES)
+
+
+@contextlib.contextmanager
+def set_rules(overrides: Rules):
+    """Scoped rule overrides (used by the perf hillclimb to flip, e.g.,
+    attention to sequence-parallel for one compile)."""
+    base = dict(get_rules())
+    base.update(overrides)
+    prev = getattr(_local, "rules", None)
+    _local.rules = base
+    try:
+        yield
+    finally:
+        if prev is None:
+            del _local.rules
+        else:
+            _local.rules = prev
+
+
+def _axes_in_mesh(mesh: Optional[Mesh]):
+    if mesh is None:
+        env = jax.sharding.get_abstract_mesh() if hasattr(jax.sharding, "get_abstract_mesh") else None
+        return None
+    return set(mesh.axis_names)
+
+
+def logical_to_mesh_spec(logical_axes: Tuple[Optional[str], ...],
+                         mesh: Optional[Mesh] = None) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec, dropping
+    mesh axes that don't exist in the current mesh (lets the same model
+    code run on 1-device CPU and the 512-chip production mesh)."""
+    rules = get_rules()
+    mesh_axes = set(mesh.axis_names) if mesh is not None else None
+    spec = []
+    used = set()
+    for ax in logical_axes:
+        if ax is None:
+            spec.append(None)
+            continue
+        target = rules.get(ax)
+        if target is None:
+            spec.append(None)
+            continue
+        if isinstance(target, str):
+            target = (target,)
+        present = tuple(t for t in target
+                        if (mesh_axes is None or t in mesh_axes)
+                        and t not in used)
+        used.update(present)
+        if not present:
+            spec.append(None)
+        elif len(present) == 1:
+            spec.append(present[0])
+        else:
+            spec.append(present)
+    return P(*spec)
+
+
+def shard_constraint(x: jax.Array, *logical_axes: Optional[str],
+                     mesh: Optional[Mesh] = None) -> jax.Array:
+    """with_sharding_constraint against the logical rules.  No-op when
+    no mesh is active or the mesh has a single device (CPU tests).
+
+    Per-axis legalization: mesh axes that don't divide the dimension are
+    dropped (e.g. kv_heads=8 on a 16-way model axis) instead of failing
+    the whole constraint — a silent whole-constraint failure is how the
+    flash accumulator ended up replicated at 21.5 GiB/device."""
+    try:
+        active = mesh
+        if active is None:
+            # rely on the jit-scope mesh: use unconstrained spec lookup
+            from jax._src import mesh as mesh_lib
+            env_mesh = mesh_lib.thread_resources.env.physical_mesh
+            if env_mesh.empty or env_mesh.size <= 1:
+                return x
+            active = env_mesh
+        spec = logical_to_mesh_spec(tuple(logical_axes), active)
+        legal = []
+        for i, ax in enumerate(spec):
+            if ax is None or i >= x.ndim:
+                legal.append(None)
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            keep, prod = [], 1
+            for a in axes:
+                size = active.shape[a]
+                if x.shape[i] % (prod * size) == 0:
+                    keep.append(a)
+                    prod *= size
+            legal.append(tuple(keep) if len(keep) > 1
+                         else (keep[0] if keep else None))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(active, P(*legal)))
+    except Exception:
+        return x
+
+
+def named_sharding(mesh: Mesh, *logical_axes: Optional[str]) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_mesh_spec(tuple(logical_axes), mesh))
+
+
+def mesh_axis_size(axis: str) -> Optional[int]:
+    """Size of a mesh axis in the ambient jit mesh (None outside)."""
+    try:
+        from jax._src import mesh as mesh_lib
+        env_mesh = mesh_lib.thread_resources.env.physical_mesh
+        if env_mesh.empty:
+            return None
+        return env_mesh.shape.get(axis)
+    except Exception:
+        return None

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes
+(DESIGN.md Sec. 8):
+
+  hamming/  - packed XOR+popcount LSH similarity (paper Sec. III-B,
+              the "extremely cheap" query-time similarity)
+  negsamp/  - fused PV-DBOW negative-sampling training step (the
+              offline T-Time cost in paper Table II)
+  kmeans/   - spherical k-means assignment (paper Sec. IV-D allocation)
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd public wrapper with an interpret fallback on CPU) and
+ref.py (pure-jnp oracle used by the allclose tests).
+"""

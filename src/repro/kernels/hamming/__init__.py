@@ -1,0 +1,1 @@
+from repro.kernels.hamming.ops import hamming_distance, hamming_similarity  # noqa: F401

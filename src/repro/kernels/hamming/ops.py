@@ -1,0 +1,50 @@
+"""Public jit'd wrappers for the hamming kernel.
+
+On CPU (this container) the Pallas body runs in interpret mode; on TPU
+the same BlockSpecs compile to Mosaic.  Inputs are padded to tile
+multiples here so the kernel never sees ragged blocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hamming import kernel as _k
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(x: jax.Array, multiple: int) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x
+
+
+def hamming_distance(q_packed: jax.Array, db_packed: jax.Array,
+                     *, tn: int = 8, tm: int = 512) -> jax.Array:
+    n, m = q_packed.shape[0], db_packed.shape[0]
+    tn = min(tn, max(1, n))
+    tm = min(tm, max(1, m))
+    q = _pad_rows(jnp.asarray(q_packed, jnp.uint32), tn)
+    db = _pad_rows(jnp.asarray(db_packed, jnp.uint32), tm)
+    out = _k.hamming_distance_kernel(q, db, tn=tn, tm=tm,
+                                     interpret=not _on_tpu())
+    return out[:n, :m]
+
+
+def hamming_similarity(q_packed: jax.Array, db_packed: jax.Array, bits: int,
+                       *, tn: int = 8, tm: int = 512,
+                       temperature: float = 1.0) -> jax.Array:
+    n, m = q_packed.shape[0], db_packed.shape[0]
+    tn = min(tn, max(1, n))
+    tm = min(tm, max(1, m))
+    q = _pad_rows(jnp.asarray(q_packed, jnp.uint32), tn)
+    db = _pad_rows(jnp.asarray(db_packed, jnp.uint32), tm)
+    out = _k.hamming_similarity_kernel(q, db, bits, tn=tn, tm=tm,
+                                       interpret=not _on_tpu(),
+                                       temperature=temperature)
+    return out[:n, :m]

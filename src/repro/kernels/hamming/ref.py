@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the hamming kernel (used by allclose tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hamming_distance_ref(q_packed: jax.Array, db_packed: jax.Array) -> jax.Array:
+    """[N, W] x [M, W] uint32 -> [N, M] int32 via broadcast XOR+popcount."""
+    x = q_packed[:, None, :] ^ db_packed[None, :, :]
+    return jax.lax.population_count(x).astype(jnp.int32).sum(axis=-1)
+
+
+def hamming_similarity_ref(q_packed: jax.Array, db_packed: jax.Array,
+                           bits: int) -> jax.Array:
+    m = hamming_distance_ref(q_packed, db_packed).astype(jnp.float32)
+    return jnp.exp(jnp.cos(jnp.pi * m / bits))

@@ -1,0 +1,1 @@
+from repro.kernels.kmeans.ops import assign  # noqa: F401

@@ -1,0 +1,32 @@
+"""Public wrapper for the spherical k-means assignment kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kmeans import kernel as _k
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def assign(x: jax.Array, c: jax.Array, *, tn: int = 512) -> jax.Array:
+    """Assignment only (int32 [N]); pads N to the tile multiple."""
+    n = x.shape[0]
+    tn = min(tn, max(1, n))
+    pad = (-n) % tn
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    out, _ = _k.assign_kernel(x, c, tn=tn, interpret=not _on_tpu())
+    return out[:n]
+
+
+def assign_with_scores(x: jax.Array, c: jax.Array, *, tn: int = 512):
+    n = x.shape[0]
+    tn = min(tn, max(1, n))
+    pad = (-n) % tn
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    out, sc = _k.assign_kernel(x, c, tn=tn, interpret=not _on_tpu())
+    return out[:n], sc[:n]

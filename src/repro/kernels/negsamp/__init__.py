@@ -1,0 +1,1 @@
+from repro.kernels.negsamp.ops import negsamp_grads, negsamp_step  # noqa: F401

@@ -1,0 +1,73 @@
+"""Public wrappers: fused SGNS gradients + a full PV-DBOW SGD step.
+
+``negsamp_step`` has the same signature/semantics as
+``repro.core.pv_dbow.sgns_step`` so the trainer can swap paths with the
+``use_kernel`` config flag; scatter-adds with duplicate-index addition
+semantics are done with ``.at[].add`` (XLA scatter-add) outside the
+kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.negsamp import kernel as _k
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_batch(x: jax.Array, multiple: int) -> jax.Array:
+    pad = (-x.shape[0]) % multiple
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x
+
+
+def negsamp_grads(d: jax.Array, w: jax.Array, wn: jax.Array, *, tb: int = 256,
+                  temperature: float = 1.0):
+    b = d.shape[0]
+    tb = min(tb, max(1, b))
+    dp, wp, wnp = _pad_batch(d, tb), _pad_batch(w, tb), _pad_batch(wn, tb)
+    loss, gd, gw, gwn = _k.negsamp_grads_kernel(dp, wp, wnp, tb=tb,
+                                                interpret=not _on_tpu(),
+                                                temperature=temperature)
+    return loss[:b], gd[:b], gw[:b], gwn[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("negatives", "lr", "unit_norm", "temperature"))
+def negsamp_step(
+    model,                       # PVDBOWModel(word_vecs, doc_vecs)
+    key: jax.Array,
+    doc_ids: jax.Array,          # int32 [B]
+    word_ids: jax.Array,         # int32 [B]
+    noise_cdf: jax.Array,        # [V] cumulative noise distribution
+    *,
+    negatives: int,
+    lr: float,
+    unit_norm: bool,
+    temperature: float = 1.0,
+):
+    from repro.core.pv_dbow import PVDBOWModel, _unit_rows, sample_negatives
+
+    b = doc_ids.shape[0]
+    neg_ids = sample_negatives(key, noise_cdf, (b, negatives))
+
+    d = model.doc_vecs[doc_ids]
+    w = model.word_vecs[word_ids]
+    wn = model.word_vecs[neg_ids]
+    loss, gd, gw, gwn = negsamp_grads(d, w, wn, temperature=temperature)
+
+    # sum-reduction semantics (matches sgns_loss): per-row O(1) updates
+    new_d = model.doc_vecs.at[doc_ids].add(-lr * gd)
+    new_w = model.word_vecs.at[word_ids].add(-lr * gw)
+    new_w = new_w.at[neg_ids.reshape(-1)].add(
+        -lr * gwn.reshape(-1, gwn.shape[-1]))
+    if unit_norm:
+        new_w = _unit_rows(new_w)
+        new_d = _unit_rows(new_d)
+    return PVDBOWModel(new_w, new_d), loss.mean()

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the negsamp kernel: same math, autodiff-free."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def negsamp_grads_ref(d: jax.Array, w: jax.Array, wn: jax.Array,
+                      temperature: float = 1.0):
+    """Returns (loss [B], grad_d, grad_w, grad_wn) — identical contract
+    to kernels.negsamp.kernel.negsamp_grads_kernel."""
+    t = temperature
+    pos = jnp.sum(w * d, axis=-1) * t
+    neg = jnp.einsum("bkd,bd->bk", wn, d) * t
+    loss = jax.nn.softplus(-pos) + jax.nn.softplus(neg).sum(axis=-1)
+    gpos = (jax.nn.sigmoid(pos) - 1.0) * t
+    gneg = jax.nn.sigmoid(neg) * t
+    grad_d = gpos[:, None] * w + jnp.einsum("bk,bkd->bd", gneg, wn)
+    grad_w = gpos[:, None] * d
+    grad_wn = gneg[:, :, None] * d[:, None, :]
+    return loss, grad_d, grad_w, grad_wn

@@ -1,0 +1,374 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax ---------------------------------
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: the
+production mesh is built from 512 placeholder host devices; every cell's
+step function must .lower().compile() under its sharding trees.
+memory_analysis() proves per-device fit, cost_analysis() + the HLO
+collective scan feed the roofline (EXPERIMENTS.md).
+
+Resumable: one JSON per cell under --out; existing cells are skipped
+unless --force.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod both] [--out results/dryrun]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.launch import specs as S
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.optimizer.adamw import AdamWConfig
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _array_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _ARRAY_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum output bytes of every collective op in the optimized HLO.
+
+    '-done' ops are skipped ('-start' already carries the shape); counts
+    are per-module-execution (the scan body's collectives appear once in
+    HLO but execute L times — we scale by trip count when the op sits
+    inside a while loop by counting it once per textual occurrence,
+    which matches how XLA unrolls cost_analysis; the roofline notes
+    this)."""
+    stats: Dict[str, Dict[str, float]] = {
+        c: {"count": 0, "bytes": 0.0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        for coll in _COLLECTIVES:
+            # match "= <shapes> <coll>(" or "<coll>-start("
+            m = re.search(rf"=\s+(.+?)\s+{coll}(-start)?\(", s)
+            if m:
+                stats[coll]["count"] += 1
+                stats[coll]["bytes"] += _array_bytes(m.group(1))
+                break
+    return stats
+
+
+def while_trip_counts(hlo_text: str) -> int:
+    """Best-effort: max trip count among while loops (layer scan)."""
+    trips = [int(t) for t in
+             re.findall(r"trip_count=\"?(\d+)", hlo_text)]
+    return max(trips, default=1)
+
+
+def _probe_cfg(cfg, k: int):
+    """Reduced-depth, unrolled-variant config for cost probes."""
+    import dataclasses
+    if cfg.family == "vlm" and cfg.cross_attn_every > 0:
+        n = k * cfg.cross_attn_every
+    elif cfg.family == "moe" and cfg.moe_every > 1:
+        n = k * cfg.moe_every
+    else:
+        n = k
+    repl = dict(n_layers=n, scan_layers=False)
+    if cfg.is_encdec:
+        repl["encoder_layers"] = k
+    return dataclasses.replace(cfg, **repl)
+
+
+def _layer_units(cfg) -> int:
+    """How many probe units the full model has (layers / groups)."""
+    if cfg.family == "vlm" and cfg.cross_attn_every > 0:
+        return cfg.n_layers // cfg.cross_attn_every
+    if cfg.family == "moe" and cfg.moe_every > 1:
+        return cfg.n_layers // cfg.moe_every
+    return cfg.n_layers
+
+
+def _compile_cell(cfg, shape: str, mesh, microbatches: int):
+    """Lower + compile one step for cfg on mesh; returns compiled."""
+    cfg = _cell_cfg(cfg, shape)
+    cell = S.SHAPES[shape]
+    opt_cfg = AdamWConfig(state_dtype=cfg.dtypes.opt_state)
+    with_enc = cfg.is_encdec or cfg.family == "vlm"
+    with mesh:
+        if cell.kind == "train":
+            import jax.numpy as jnp
+            accum = jnp.bfloat16 if (cfg.family == "moe" and
+                                     cfg.n_experts >= 64) else None
+            step = ST.make_train_step(cfg, opt_cfg,
+                                      microbatches=microbatches,
+                                      accum_dtype=accum)
+            aparams = ST.abstract_params(cfg)
+            aopt = ST.abstract_opt_state(cfg, opt_cfg)
+            p_sh = ST.params_shardings(cfg, mesh)
+            o_sh = ST.opt_state_shardings(cfg, mesh)
+            b_sh = ST.batch_shardings(cfg, mesh, cell.global_batch, with_enc)
+            abatch = S.train_input_specs(cfg, shape)
+            jitted = jax.jit(step,
+                             in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None),
+                             donate_argnums=(0, 1))
+            return jitted.lower(aparams, aopt, abatch).compile()
+        max_len = S.effective_max_len(cfg, shape)
+        astate = ST.abstract_decode_state(cfg, cell.global_batch,
+                                          max_len, with_enc)
+        st_sh = ST.decode_state_shardings(cfg, mesh, astate,
+                                          cell.global_batch)
+        p_sh = ST.params_shardings(cfg, mesh)
+        aparams = ST.abstract_params(cfg)
+        tok = S.serve_token_spec(cfg, shape)
+        ba = ST.batch_axes(mesh, cell.global_batch)
+        tok_sh = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(ba if ba else None, None))
+        fn = (ST.make_prefill_step(cfg) if cell.kind == "prefill"
+              else ST.make_decode_step(cfg))
+        jitted = jax.jit(fn, in_shardings=(p_sh, tok_sh, st_sh),
+                         out_shardings=(None, st_sh),
+                         donate_argnums=(2,))
+        return jitted.lower(aparams, tok, astate).compile()
+
+
+def _extract_costs(compiled) -> Dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    colls = collective_stats(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": sum(c["bytes"] for c in colls.values()),
+        "colls": colls,
+    }
+
+
+def cost_probe(cfg, shape: str, mesh) -> Dict:
+    """Two-point depth probe: compile unrolled depth-1 and depth-2
+    variants, reconstruct total = outer + units * per_layer.  Needed
+    because cost_analysis counts while-loop (scan) bodies once."""
+    probes = {}
+    for k in (1, 2):
+        c = _compile_cell(_probe_cfg(cfg, k), shape, mesh, microbatches=1)
+        probes[k] = _extract_costs(c)
+    units = _layer_units(cfg)
+    out = {}
+    for key in ("flops", "bytes", "coll_bytes"):
+        # clamp: XLA occasionally optimizes depth-2 harder than depth-1
+        # (negative marginal); fall back to attributing everything as
+        # per-layer in that case
+        per_unit = max(probes[2][key] - probes[1][key], 0.0)
+        outer = max(probes[1][key] - per_unit, 0.0)
+        out[f"{key}_per_layer_unit"] = per_unit
+        out[f"{key}_outer"] = outer
+        out[f"{key}_total"] = outer + units * per_unit
+    out["units"] = units
+    out["colls_probe1"] = probes[1]["colls"]
+    out["colls_probe2"] = probes[2]["colls"]
+    return out
+
+
+def _cell_cfg(cfg, shape: str):
+    """Per-shape config adjustments: chunked (flash-style) attention for
+    long-sequence prefill so scores never materialize at [S, S], and
+    bf16 weights for serving (standard deployment: no optimizer, no
+    master copy — halves weight HBM and removes the per-step cast)."""
+    import dataclasses
+    if S.SHAPES[shape].kind == "prefill" and S.SHAPES[shape].seq_len >= 8192:
+        cfg = dataclasses.replace(cfg, attn_impl="chunked")
+    if S.SHAPES[shape].kind in ("prefill", "decode"):
+        cfg = dataclasses.replace(
+            cfg, dtypes=dataclasses.replace(cfg.dtypes, params="bfloat16"))
+    return cfg
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             verbose: bool = True) -> Dict:
+    cfg = get_config(arch)
+    ok, reason = S.cell_is_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+
+    t0 = time.time()
+    cfg = _cell_cfg(cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = S.SHAPES[shape]
+    opt_cfg = AdamWConfig(state_dtype=cfg.dtypes.opt_state)
+    with_enc = cfg.is_encdec or cfg.family == "vlm"
+
+    with mesh:
+        if cell.kind == "train":
+            import jax.numpy as jnp
+            mb = S.microbatches_for(cfg, shape)
+            accum = jnp.bfloat16 if (cfg.family == "moe" and
+                                     cfg.n_experts >= 64) else None
+            step = ST.make_train_step(cfg, opt_cfg, microbatches=mb,
+                                      accum_dtype=accum)
+            aparams = ST.abstract_params(cfg)
+            aopt = ST.abstract_opt_state(cfg, opt_cfg)
+            p_sh = ST.params_shardings(cfg, mesh)
+            o_sh = ST.opt_state_shardings(cfg, mesh)
+            b_sh = ST.batch_shardings(cfg, mesh, cell.global_batch, with_enc)
+            abatch = S.train_input_specs(cfg, shape)
+            jitted = jax.jit(step,
+                             in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(aparams, aopt, abatch)
+        else:
+            max_len = S.effective_max_len(cfg, shape)
+            astate = ST.abstract_decode_state(cfg, cell.global_batch,
+                                              max_len, with_enc)
+            st_sh = ST.decode_state_shardings(cfg, mesh, astate,
+                                              cell.global_batch)
+            p_sh = ST.params_shardings(cfg, mesh)
+            aparams = ST.abstract_params(cfg)
+            tok = S.serve_token_spec(cfg, shape)
+            ba = ST.batch_axes(mesh, cell.global_batch)
+            tok_sh = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(ba if ba else None, None))
+            fn = (ST.make_prefill_step(cfg) if cell.kind == "prefill"
+                  else ST.make_decode_step(cfg))
+            jitted = jax.jit(fn, in_shardings=(p_sh, tok_sh, st_sh),
+                             out_shardings=(None, st_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(aparams, tok, astate)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    colls = collective_stats(hlo)
+    trip = while_trip_counts(hlo)
+
+    result = {
+        "arch": arch, "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "n_devices": int(np.prod(list(
+            make_production_mesh(multi_pod=multi_pod).shape.values()))),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": float(cost.get("flops", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes":
+                int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        "collectives": colls,
+        "collective_bytes_total": sum(c["bytes"] for c in colls.values()),
+        "scan_trip_count": trip,
+        "params_estimate": cfg.param_count_estimate(),
+        "active_params_estimate": cfg.active_param_count_estimate(),
+    }
+    if cell.kind == "train":
+        result["microbatches"] = S.microbatches_for(cfg, shape)
+
+    # two-point depth probe for exact totals (scan bodies count once in
+    # cost_analysis); only on the single-pod mesh — the roofline table is
+    # single-pod per the spec, and multi-pod reuses shape-identical math
+    if not multi_pod:
+        t_probe = time.time()
+        result["probe"] = cost_probe(cfg, shape, mesh)
+        result["probe_s"] = round(time.time() - t_probe, 1)
+
+    if verbose:
+        extra = ""
+        if "probe" in result:
+            extra = (f" probe_flops={result['probe']['flops_total']:.3e}"
+                     f" probe_coll={result['probe']['coll_bytes_total']:.3e}")
+        print(f"  flops(raw)={result['flops']:.3e} "
+              f"temp={result['memory']['temp_bytes']/2**30:.2f}GiB "
+              f"compile={t_compile:.0f}s{extra}", flush=True)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(S.SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch.replace('-', '_')}__{shape}__" \
+                      f"{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    try:
+                        with open(path) as f:
+                            prev = json.load(f)
+                    except Exception:  # noqa: BLE001
+                        prev = {}
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[skip existing] {tag}")
+                        continue  # errors are retried
+                print(f"[cell] {tag}", flush=True)
+                try:
+                    res = run_cell(arch, shape, mp)
+                except Exception as e:  # noqa: BLE001
+                    failures += 1
+                    res = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "error", "error": str(e),
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(f"  ERROR: {e}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Training driver: config-driven, fault-tolerant, mesh-agnostic.
+
+Runs on whatever devices exist (1 CPU in dev, a pod slice in prod):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --steps 200 --batch 8 --seq 256 --smoke
+
+Features exercised end-to-end here: sharded params/optimizer via the
+logical rules, microbatch gradient accumulation, checkpoint/restart
+(resumes from the latest committed step), similarity-driven data
+sampling (--similarity-prompt), loss logging.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data.corpus import SyntheticCorpusConfig, generate_text_corpus
+from repro.data.pipeline import LMBatchPipeline, PrefetchIterator, SimilaritySampler
+from repro.data.store import ShardedCorpus
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import (
+    batch_shardings,
+    make_train_step,
+    opt_state_shardings,
+    params_shardings,
+)
+from repro.models import model as M
+from repro.optimizer.adamw import AdamWConfig, adamw_init
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--n-docs", type=int, default=2000)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--similarity-prompt", type=int, nargs="*", default=None,
+                    help="word ids; shards are pps-sampled toward them")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, max_seq_len=max(cfg.max_seq_len, args.seq))
+    mesh = make_host_mesh()
+    opt_cfg = AdamWConfig(lr=args.lr, state_dtype=cfg.dtypes.opt_state)
+
+    # ---------------- data -------------------------------------------
+    ccfg = SyntheticCorpusConfig(
+        n_docs=args.n_docs,
+        vocab_size=min(cfg.vocab_size, 8192), n_topics=16)
+    docs, _ = generate_text_corpus(ccfg)
+    corpus = ShardedCorpus.from_documents(docs, ccfg.vocab_size)
+    shard_order = None
+    if args.similarity_prompt:
+        # EmApprox as a training-data curriculum (DESIGN.md Sec. 4)
+        from repro.core.index import build_index
+        from repro.core.lsh import LSHConfig
+        from repro.core.pv_dbow import PVDBOWConfig, train_pv_dbow
+        pv_cfg = PVDBOWConfig(dim=32, steps=300)
+        index = build_index(corpus, train_pv_dbow(corpus, pv_cfg),
+                            LSHConfig(bits=128),
+                            temperature=pv_cfg.temperature)
+        probs = index.shard_probabilities(args.similarity_prompt)
+        shard_order = SimilaritySampler(probs).draw_epoch_order()
+        print(f"[train] similarity sampling over {corpus.n_shards} shards")
+    pipeline = LMBatchPipeline(corpus, args.batch, args.seq,
+                               shard_order=shard_order)
+
+    # ---------------- state ------------------------------------------
+    with mesh:
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        opt_state = adamw_init(params, opt_cfg)
+        step_fn = jax.jit(
+            make_train_step(cfg, opt_cfg, microbatches=args.microbatches,
+                            total_steps=args.steps),
+            in_shardings=(params_shardings(cfg, mesh),
+                          opt_state_shardings(cfg, mesh),
+                          batch_shardings(cfg, mesh, args.batch,
+                                          cfg.is_encdec or cfg.family == "vlm")),
+            out_shardings=(params_shardings(cfg, mesh),
+                           opt_state_shardings(cfg, mesh), None),
+        )
+
+        start_step = 0
+        ckpt = None
+        if args.ckpt_dir:
+            ckpt = CheckpointManager(args.ckpt_dir)
+            restored = ckpt.restore_latest((params, opt_state))
+            if restored[0] is not None:
+                start_step, (params, opt_state) = restored
+                print(f"[train] resumed from step {start_step}")
+
+        # ---------------- loop ---------------------------------------
+        it = PrefetchIterator(iter(_batch_stream(pipeline, cfg)), depth=2)
+        t0 = time.time()
+        tokens_seen = 0
+        for step in range(start_step, args.steps):
+            batch = next(it)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            tokens_seen += batch["tokens"].size
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                gn = float(metrics["grad_norm"])
+                tps = tokens_seen / max(time.time() - t0, 1e-9)
+                print(f"[train] step {step} loss {loss:.4f} "
+                      f"gnorm {gn:.3f} tok/s {tps:,.0f}", flush=True)
+            if ckpt and (step + 1) % args.ckpt_every == 0:
+                ckpt.save(step + 1, (params, opt_state))
+        if ckpt:
+            ckpt.save(args.steps, (params, opt_state))
+            ckpt.wait()
+        print(f"[train] done: {args.steps} steps, "
+              f"{tokens_seen:,} tokens, {time.time()-t0:.1f}s")
+
+
+def _batch_stream(pipeline: LMBatchPipeline, cfg):
+    epoch = 0
+    while True:
+        yielded = False
+        for b in pipeline.iter_epoch(epoch):
+            batch = {k: jnp.asarray(v) for k, v in b.items()}
+            if cfg.is_encdec:
+                batch["enc_inputs"] = jnp.zeros(
+                    (b["tokens"].shape[0], cfg.encoder_seq, cfg.d_model),
+                    cfg.dtypes.compute_dtype)
+            elif cfg.family == "vlm":
+                batch["enc_inputs"] = jnp.zeros(
+                    (b["tokens"].shape[0], cfg.vision_tokens, cfg.d_model),
+                    cfg.dtypes.compute_dtype)
+            yielded = True
+            yield batch
+        epoch += 1
+        if not yielded:
+            raise RuntimeError("corpus too small for one batch")
+
+
+if __name__ == "__main__":
+    main()

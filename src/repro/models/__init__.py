@@ -1,0 +1,21 @@
+"""Model zoo: the 10 assigned architectures as one composable family.
+
+All models share a single ModelConfig surface and three entry points:
+  * ``init_params`` (works under jax.eval_shape for the dry-run),
+  * ``train_step_fn``  (next-token loss, grads, optimizer update),
+  * ``prefill_fn`` / ``decode_step_fn`` (KV-cache serving).
+
+Families: dense transformer (GQA/RoPE/QKV-bias), MoE (top-1 capacity
+dispatch), SSM (Mamba2 SSD), hybrid (Hymba parallel attn+SSM), enc-dec
+audio backbone (Whisper, stub frontend), VLM (Llama-3.2-vision backbone,
+stub patch embeddings, interleaved cross-attention).
+"""
+from repro.models.config import ModelConfig, DTypePolicy  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    init_params,
+    forward_train,
+    loss_fn,
+    init_decode_state,
+    prefill,
+    decode_step,
+)

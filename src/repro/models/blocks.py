@@ -1,0 +1,194 @@
+"""Per-family transformer blocks: ParamDefs + apply functions.
+
+Every block comes in one apply function usable for training (full
+sequence, no cache) and serving (with KV/SSM state).  Blocks take the
+*per-layer* param dict; model.py stacks them along a leading "layers"
+axis and scans.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import ParamDef, gelu_mlp, rms_norm, swiglu
+from repro.distributed.sharding import shard_constraint
+
+
+# ----------------------------------------------------------------------
+# ParamDefs
+# ----------------------------------------------------------------------
+def attn_defs(cfg) -> dict:
+    d, q, kv = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    out = {
+        "wq": ParamDef((d, q), ("fsdp", "q_dim")),
+        "wk": ParamDef((d, kv), ("fsdp", "kv_dim")),
+        "wv": ParamDef((d, kv), ("fsdp", "kv_dim")),
+        "wo": ParamDef((q, d), ("q_dim", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        out.update({
+            "bq": ParamDef((q,), ("q_dim",), init="zeros"),
+            "bk": ParamDef((kv,), ("kv_dim",), init="zeros"),
+            "bv": ParamDef((kv,), ("kv_dim",), init="zeros"),
+        })
+    return out
+
+
+def mlp_defs(cfg, gelu: bool = False) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    if gelu:
+        return {
+            "w_in": ParamDef((d, ff), ("fsdp", "d_ff")),
+            "b_in": ParamDef((ff,), ("d_ff",), init="zeros"),
+            "w_out": ParamDef((ff, d), ("d_ff", "fsdp")),
+            "b_out": ParamDef((d,), ("d_model",), init="zeros"),
+        }
+    return {
+        "w_gate": ParamDef((d, ff), ("fsdp", "d_ff")),
+        "w_up": ParamDef((d, ff), ("fsdp", "d_ff")),
+        "w_down": ParamDef((ff, d), ("d_ff", "fsdp")),
+    }
+
+
+def moe_defs(cfg) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamDef((d, e), ("d_model", None)),
+        "w_gate": ParamDef((e, d, ff), ("experts", "fsdp", None)),
+        "w_up": ParamDef((e, d, ff), ("experts", "fsdp", None)),
+        "w_down": ParamDef((e, ff, d), ("experts", None, "fsdp")),
+    }
+
+
+def ssm_defs(cfg) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    proj_out = 2 * di + 2 * n + h
+    return {
+        "in_proj": ParamDef((d, proj_out), ("fsdp", "d_inner")),
+        "conv_w": ParamDef((cfg.conv_dim, di), (None, "d_inner"), scale=0.5),
+        "dt_bias": ParamDef((h,), ("ssm_heads",), init="zeros"),
+        "a_log": ParamDef((h,), ("ssm_heads",), init="zeros"),
+        "d_skip": ParamDef((h,), ("ssm_heads",), init="ones"),
+        "out_proj": ParamDef((di, d), ("d_inner", "fsdp")),
+    }
+
+
+def cross_defs(cfg) -> dict:
+    d, q, kv = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    return {
+        "wq": ParamDef((d, q), ("fsdp", "q_dim")),
+        "wk": ParamDef((d, kv), ("fsdp", "kv_dim")),
+        "wv": ParamDef((d, kv), ("fsdp", "kv_dim")),
+        "wo": ParamDef((q, d), ("q_dim", "fsdp")),
+        "gate": ParamDef((), (), init="zeros"),
+    }
+
+
+def block_defs(cfg, kind: str) -> dict:
+    """kind: dense | moe | ssm | hybrid | cross | encoder."""
+    norm = lambda: ParamDef((cfg.d_model,), ("d_model",), init="ones")
+    if kind == "ssm":
+        return {"norm": norm(), "ssm": ssm_defs(cfg)}
+    if kind == "cross":
+        return {"norm1": norm(), "cross": cross_defs(cfg),
+                "norm2": norm(), "mlp": mlp_defs(cfg)}
+    if kind == "encoder":
+        return {"norm1": norm(), "attn": attn_defs(cfg),
+                "norm2": norm(), "mlp": mlp_defs(cfg, gelu=True)}
+    if kind == "dec_cross":   # whisper decoder layer: self + cross + mlp
+        return {"norm1": norm(), "attn": attn_defs(cfg),
+                "norm2": norm(), "cross": cross_defs(cfg),
+                "norm3": norm(), "mlp": mlp_defs(cfg, gelu=True)}
+    out = {"norm1": norm(), "attn": attn_defs(cfg), "norm2": norm()}
+    if kind == "moe":
+        out["moe"] = moe_defs(cfg)
+    elif kind == "hybrid":
+        out["ssm"] = ssm_defs(cfg)
+        out["mlp"] = mlp_defs(cfg)
+        out["mix"] = ParamDef((2,), (None,), init="ones")
+    elif kind == "dense":
+        out["mlp"] = mlp_defs(cfg)
+    else:
+        raise ValueError(kind)
+    return out
+
+
+# ----------------------------------------------------------------------
+# apply
+# ----------------------------------------------------------------------
+def apply_block(
+    p: dict,
+    x: jax.Array,
+    cfg,
+    kind: str,
+    *,
+    positions: jax.Array,
+    cache: Optional[attn_mod.KVCache] = None,
+    ssm_state: Optional[ssm_mod.SSMState] = None,
+    enc: Optional[jax.Array] = None,
+    causal: bool = True,
+):
+    """Returns (x_out, new_cache, new_ssm_state, aux_loss)."""
+    new_cache, new_state = None, None
+    zero = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        h = rms_norm(x, p["norm"], cfg.norm_eps)
+        y, new_state = ssm_mod.ssm_apply(p["ssm"], h, cfg, ssm_state)
+        return x + y, None, new_state, zero
+
+    if kind == "cross":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        y = attn_mod.cross_attention_apply(p["cross"], h, enc, cfg=cfg)
+        x = x + jnp.tanh(p["cross"]["gate"]) * y
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        return x + swiglu(h, **p["mlp"]), None, None, zero
+
+    if kind == "encoder":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        y, _ = attn_mod.attention_apply(
+            p["attn"], h, cfg=cfg, positions=positions, causal=False,
+            use_rope=False)
+        x = x + y
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        return x + gelu_mlp(h, p["mlp"]["w_in"], p["mlp"]["b_in"],
+                            p["mlp"]["w_out"], p["mlp"]["b_out"]), None, None, zero
+
+    if kind == "dec_cross":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        y, new_cache = attn_mod.attention_apply(
+            p["attn"], h, cfg=cfg, positions=positions, cache=cache,
+            causal=causal, use_rope=False)
+        x = x + y
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + attn_mod.cross_attention_apply(p["cross"], h, enc, cfg=cfg)
+        h = rms_norm(x, p["norm3"], cfg.norm_eps)
+        return (x + gelu_mlp(h, p["mlp"]["w_in"], p["mlp"]["b_in"],
+                             p["mlp"]["w_out"], p["mlp"]["b_out"]),
+                new_cache, None, zero)
+
+    # dense / moe / hybrid share the attention sublayer
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    window = cfg.sliding_window if kind == "hybrid" else 0
+    y, new_cache = attn_mod.attention_apply(
+        p["attn"], h, cfg=cfg, positions=positions, cache=cache,
+        causal=causal, window=window)
+    if kind == "hybrid":
+        ys, new_state = ssm_mod.ssm_apply(p["ssm"], h, cfg, ssm_state)
+        mix = jax.nn.softmax(p["mix"].astype(jnp.float32))
+        y = mix[0] * y.astype(jnp.float32) + mix[1] * ys.astype(jnp.float32)
+        y = y.astype(x.dtype)
+    x = x + y
+    x = shard_constraint(x, "batch", "seq", "d_model")
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    aux = zero
+    if kind == "moe":
+        x = x + moe_mod.moe_apply(p["moe"], h, cfg)
+        aux = moe_mod.moe_aux_loss(p["moe"], h, cfg)
+    else:
+        x = x + swiglu(h, **p["mlp"])
+    return x, new_cache, new_state, aux

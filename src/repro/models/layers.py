@@ -1,0 +1,100 @@
+"""Shared layers + the parameter-definition machinery.
+
+Parameters are declared as ``ParamDef``s (shape, logical sharding axes,
+initializer).  ``init_params`` materializes them (or produces abstract
+ShapeDtypeStructs under ``jax.eval_shape`` for the dry-run);
+``logical_axes_tree`` returns the same pytree filled with logical-axis
+tuples so the launcher can derive NamedShardings without touching model
+code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard_constraint
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | small_normal
+    scale: float = 1.0
+
+    def initializer(self, key: jax.Array, dtype) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        fan_in = self.shape[0] if len(self.shape) >= 2 else max(self.shape[-1], 1)
+        std = self.scale / np.sqrt(fan_in)
+        return (jax.random.normal(key, self.shape, jnp.float32) * std).astype(dtype)
+
+
+ParamTree = Dict  # nested dict of ParamDef / arrays
+
+
+def materialize(defs: ParamTree, key: jax.Array, dtype) -> ParamTree:
+    """Turn a tree of ParamDefs into arrays (jit/eval_shape friendly)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    vals = [d.initializer(k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def logical_axes_tree(defs: ParamTree) -> ParamTree:
+    return jax.tree_util.tree_map(
+        lambda d: d.logical_axes, defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ----------------------------------------------------------------------
+# normalization / activations
+# ----------------------------------------------------------------------
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g) * u
+    h = shard_constraint(h, "batch", "seq", "d_ff")
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def gelu_mlp(x: jax.Array, w_in: jax.Array, b_in: jax.Array,
+             w_out: jax.Array, b_out: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_in) + b_in)
+    h = shard_constraint(h, "batch", "seq", "d_ff")
+    return jnp.einsum("...f,fd->...d", h, w_out) + b_out
+
+
+# ----------------------------------------------------------------------
+# rotary position embeddings
+# ----------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                  # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]                     # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

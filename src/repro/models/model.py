@@ -1,0 +1,425 @@
+"""Top-level model assembly: init, train forward, prefill, decode.
+
+Layers are stacked along a leading "layers" axis and consumed with
+``jax.lax.scan`` so HLO size (and compile time) is O(1) in depth — that
+is what makes 80 dry-run compiles of 30-48-layer models tractable.  The
+VLM's heterogeneous stack scans over *groups* (N-1 dense + 1 cross
+layer) so no gated-FLOP waste is introduced.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_constraint
+from repro.models import blocks
+from repro.models.attention import KVCache, cache_pos_update
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    ParamDef,
+    logical_axes_tree,
+    materialize,
+    rms_norm,
+)
+from repro.models.ssm import SSMState
+
+
+# ----------------------------------------------------------------------
+# parameter trees
+# ----------------------------------------------------------------------
+def _stack_defs(defs, n: int):
+    return jax.tree_util.tree_map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.logical_axes,
+                           d.init, d.scale),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _layer_kind(cfg: ModelConfig) -> str:
+    return {"dense": "dense", "moe": "moe", "ssm": "ssm",
+            "hybrid": "hybrid", "audio": "dec_cross", "vlm": "dense"}[cfg.family]
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    out: Dict[str, Any] = {
+        "tok_emb": ParamDef((v, d), ("vocab", "fsdp")),
+        "final_norm": ParamDef((d,), ("d_model",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ParamDef((d, v), ("fsdp", "vocab"))
+
+    kind = _layer_kind(cfg)
+    if cfg.family == "vlm" and cfg.cross_attn_every > 0:
+        n_groups = cfg.n_layers // cfg.cross_attn_every
+        plain_per = cfg.cross_attn_every - 1
+        out["groups"] = {
+            "plain": _stack_defs(_stack_defs(blocks.block_defs(cfg, "dense"),
+                                             plain_per), n_groups),
+            "cross": _stack_defs(blocks.block_defs(cfg, "cross"), n_groups),
+        }
+    elif cfg.family == "moe" and cfg.moe_every > 1:
+        # interleaved dense/MoE (maverick): groups of (moe_every-1 dense
+        # + 1 moe), dense first
+        n_groups = cfg.n_layers // cfg.moe_every
+        dense_per = cfg.moe_every - 1
+        out["groups"] = {
+            "plain": _stack_defs(_stack_defs(blocks.block_defs(cfg, "dense"),
+                                             dense_per), n_groups),
+            "moe": _stack_defs(blocks.block_defs(cfg, "moe"), n_groups),
+        }
+    else:
+        out["layers"] = _stack_defs(blocks.block_defs(cfg, kind), cfg.n_layers)
+
+    if cfg.is_encdec:
+        out["encoder"] = _stack_defs(blocks.block_defs(cfg, "encoder"),
+                                     cfg.encoder_layers)
+        out["enc_final_norm"] = ParamDef((d,), ("d_model",), init="ones")
+        out["dec_pos_emb"] = ParamDef((cfg.max_seq_len, d), (None, "fsdp"),
+                                      scale=0.02)
+    return out
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return materialize(param_defs(cfg), key, cfg.dtypes.params_dtype)
+
+
+def logical_axes(cfg: ModelConfig):
+    return logical_axes_tree(param_defs(cfg))
+
+
+# ----------------------------------------------------------------------
+# forward (training / no-cache)
+# ----------------------------------------------------------------------
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        policy = jax.checkpoint_policies.nothing_saveable
+    else:
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _cast_tree(params, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+
+
+def _scan_apply(body, x, stacked, cfg: ModelConfig, remat: bool = False):
+    """jax.lax.scan over the stacked layer axis, or a Python unroll when
+    cfg.scan_layers is False (used by the dry-run cost probes: XLA's
+    cost_analysis counts while-loop bodies ONCE, so exact FLOP totals
+    need an unrolled compile at small depth)."""
+    fn = _maybe_remat(body, cfg) if remat else body
+    if cfg.scan_layers:
+        return jax.lax.scan(fn, x, stacked)
+    n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    ys = []
+    for i in range(n):
+        sl = jax.tree_util.tree_map(lambda a: a[i], stacked)
+        x, y = fn(x, sl)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys_stacked = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys_stacked = None
+    return x, ys_stacked
+
+
+def _run_encoder(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Whisper encoder over stub frame embeddings [B, T, d]."""
+    x = frames
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, layer_params):
+        y, _, _, _ = blocks.apply_block(layer_params, carry, cfg, "encoder",
+                                        positions=positions, causal=False)
+        return y, None
+
+    x, _ = _scan_apply(body, x, params["encoder"], cfg, remat=True)
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _forward_impl(
+    params,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    enc_inputs: Optional[jax.Array],
+) -> Tuple[jax.Array, jax.Array]:
+    compute = cfg.dtypes.compute_dtype
+    cparams = _cast_tree(params, compute)
+    b, s = tokens.shape
+    x = cparams["tok_emb"][tokens]
+    x = shard_constraint(x, "batch", "seq", "d_model")
+    positions = jnp.arange(s)
+
+    enc = None
+    if cfg.is_encdec:
+        enc = _run_encoder(cparams, enc_inputs.astype(compute), cfg)
+        x = x + cparams["dec_pos_emb"][:s][None]
+    elif cfg.family == "vlm":
+        enc = enc_inputs.astype(compute)
+
+    kind = _layer_kind(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.family == "vlm" and cfg.cross_attn_every > 0:
+        def group_body(carry, gp):
+            def plain_body(c, lp):
+                y, _, _, _ = blocks.apply_block(lp, c, cfg, "dense",
+                                                positions=positions)
+                return y, None
+            h, _ = _scan_apply(plain_body, carry, gp["plain"], cfg)
+            h, _, _, _ = blocks.apply_block(gp["cross"], h, cfg, "cross",
+                                            positions=positions, enc=enc)
+            return h, None
+        x, _ = _scan_apply(group_body, x, cparams["groups"], cfg, remat=True)
+    elif cfg.family == "moe" and cfg.moe_every > 1:
+        def group_body(carry, gp):
+            def plain_body(c, lp):
+                y, _, _, _ = blocks.apply_block(lp, c, cfg, "dense",
+                                                positions=positions)
+                return y, None
+            h, _ = _scan_apply(plain_body, carry, gp["plain"], cfg)
+            h, _, _, aux = blocks.apply_block(gp["moe"], h, cfg, "moe",
+                                              positions=positions)
+            return h, aux
+        x, auxs = _scan_apply(group_body, x, cparams["groups"], cfg,
+                              remat=True)
+        aux_total = auxs.sum()
+    else:
+        def body(carry, lp):
+            y, _, _, aux = blocks.apply_block(lp, carry, cfg, kind,
+                                              positions=positions, enc=enc)
+            return y, aux
+        x, auxs = _scan_apply(body, x, cparams["layers"], cfg, remat=True)
+        aux_total = auxs.sum()
+
+    x = rms_norm(x, cparams["final_norm"], cfg.norm_eps)
+    head = (cparams["tok_emb"].T if cfg.tie_embeddings
+            else cparams["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return shard_constraint(logits, "batch", "seq", "vocab"), aux_total
+
+
+def forward(
+    params,
+    tokens: jax.Array,                 # [B, S] int32
+    cfg: ModelConfig,
+    *,
+    enc_inputs: Optional[jax.Array] = None,   # audio frames / vision embeds
+) -> jax.Array:
+    """Full-sequence causal forward -> logits [B, S, vocab]."""
+    logits, _ = _forward_impl(params, tokens, cfg, enc_inputs)
+    return logits
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            aux_coef: float = 0.01) -> jax.Array:
+    """Masked next-token cross-entropy (+ MoE load-balance aux loss)."""
+    logits, aux = _forward_impl(params, batch["tokens"], cfg,
+                                batch.get("enc_inputs"))
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None],
+                               axis=-1)[..., 0]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    if cfg.family == "moe":
+        loss = loss + aux_coef * aux
+    return loss
+
+
+forward_train = forward  # alias used by smoke tests
+
+
+# ----------------------------------------------------------------------
+# serving: prefill + decode
+# ----------------------------------------------------------------------
+class DecodeState(NamedTuple):
+    kv: Optional[Tuple[jax.Array, jax.Array]]   # stacked [L, B, S, KH, hd]
+    ssm: Optional[Tuple[jax.Array, jax.Array]]  # stacked state/conv
+    pos: Optional[jax.Array]                     # [S_cache] ring positions
+    length: jax.Array                            # [] int32
+    enc: Optional[jax.Array] = None              # encoder/vision context
+
+
+def _cache_seq_len(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.sliding_window > 0:
+        return min(max_len, cfg.sliding_window)
+    return max_len
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      enc: Optional[jax.Array] = None) -> DecodeState:
+    dt = cfg.dtypes.kv_cache_dtype
+    kv, ssm, pos = None, None, None
+    if cfg.family == "vlm" and cfg.cross_attn_every > 0:
+        n_groups = cfg.n_layers // cfg.cross_attn_every
+        plain_per = cfg.cross_attn_every - 1
+        k = jnp.zeros((n_groups, plain_per, batch, max_len,
+                       cfg.n_kv_heads, cfg.head_dim), dt)
+        kv = (k, jnp.zeros_like(k))
+        pos = jnp.full((max_len,), -1, jnp.int32)
+    elif cfg.family == "moe" and cfg.moe_every > 1:
+        n_groups = cfg.n_layers // cfg.moe_every
+        dense_per = cfg.moe_every - 1
+        kp = jnp.zeros((n_groups, dense_per, batch, max_len,
+                        cfg.n_kv_heads, cfg.head_dim), dt)
+        km = jnp.zeros((n_groups, batch, max_len,
+                        cfg.n_kv_heads, cfg.head_dim), dt)
+        kv = {"plain": (kp, jnp.zeros_like(kp)),
+              "moe": (km, jnp.zeros_like(km))}
+        pos = jnp.full((max_len,), -1, jnp.int32)
+    elif cfg.family != "ssm":
+        s_len = _cache_seq_len(cfg, max_len)
+        k = jnp.zeros((cfg.n_layers, batch, s_len, cfg.n_kv_heads,
+                       cfg.head_dim), dt)
+        kv = (k, jnp.zeros_like(k))
+        pos = jnp.full((s_len,), -1, jnp.int32)
+    if cfg.family in ("ssm", "hybrid"):
+        st = jnp.zeros((cfg.n_layers, batch, cfg.ssm_heads,
+                        cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+        cv = jnp.zeros((cfg.n_layers, batch, cfg.conv_dim - 1, cfg.d_inner),
+                       dt)
+        ssm = (st, cv)
+    return DecodeState(kv=kv, ssm=ssm, pos=pos,
+                       length=jnp.zeros((), jnp.int32), enc=enc)
+
+
+def _forward_cached(params, tokens, cfg: ModelConfig, state: DecodeState):
+    """Shared prefill/decode body: runs S tokens against the caches."""
+    compute = cfg.dtypes.compute_dtype
+    cparams = _cast_tree(params, compute)
+    b, s = tokens.shape
+    x = cparams["tok_emb"][tokens]
+    x = shard_constraint(x, "batch", "seq", "d_model")
+    positions = state.length + jnp.arange(s)
+    enc = state.enc
+    if enc is not None:
+        enc = enc.astype(compute)
+    if cfg.is_encdec:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            cparams["dec_pos_emb"], state.length, s, axis=0)[None]
+
+    kind = _layer_kind(cfg)
+    new_pos = (cache_pos_update(state.pos, state.length, s)
+               if state.pos is not None else None)
+
+    if cfg.family == "vlm" and cfg.cross_attn_every > 0:
+        k_all, v_all = state.kv
+
+        def group_body(carry, xs):
+            gp, kg, vg = xs
+
+            def plain_body(c, xs2):
+                lp, kl, vl = xs2
+                cache = KVCache(kl, vl, state.pos, state.length)
+                y, nc, _, _ = blocks.apply_block(
+                    lp, c, cfg, "dense", positions=positions, cache=cache)
+                return y, (nc.k, nc.v)
+            h, (nk, nv) = _scan_apply(plain_body, carry,
+                                      (gp["plain"], kg, vg), cfg)
+            h, _, _, _ = blocks.apply_block(gp["cross"], h, cfg, "cross",
+                                            positions=positions, enc=enc)
+            return h, (nk, nv)
+        x, (new_k, new_v) = _scan_apply(group_body, x,
+                                        (cparams["groups"], k_all, v_all), cfg)
+        new_state = DecodeState((new_k, new_v), None, new_pos,
+                                state.length + s, state.enc)
+    elif cfg.family == "moe" and cfg.moe_every > 1:
+        kp, vp = state.kv["plain"]
+        km, vm = state.kv["moe"]
+
+        def group_body(carry, xs):
+            gp, kpl, vpl, kml, vml = xs
+
+            def plain_body(c, xs2):
+                lp, kl, vl = xs2
+                cache = KVCache(kl, vl, state.pos, state.length)
+                y, nc, _, _ = blocks.apply_block(
+                    lp, c, cfg, "dense", positions=positions, cache=cache)
+                return y, (nc.k, nc.v)
+            h, (nkp, nvp) = _scan_apply(plain_body, carry,
+                                        (gp["plain"], kpl, vpl), cfg)
+            cache = KVCache(kml, vml, state.pos, state.length)
+            h, nc, _, _ = blocks.apply_block(gp["moe"], h, cfg, "moe",
+                                             positions=positions, cache=cache)
+            return h, (nkp, nvp, nc.k, nc.v)
+        x, (nkp, nvp, nkm, nvm) = _scan_apply(
+            group_body, x, (cparams["groups"], kp, vp, km, vm), cfg)
+        new_state = DecodeState({"plain": (nkp, nvp), "moe": (nkm, nvm)},
+                                None, new_pos, state.length + s, state.enc)
+    elif cfg.family == "ssm":
+        st_all, cv_all = state.ssm
+
+        def body(carry, xs):
+            lp, st, cv = xs
+            y, _, new_ssm, _ = blocks.apply_block(
+                lp, carry, cfg, "ssm", positions=positions,
+                ssm_state=SSMState(st, cv))
+            return y, (new_ssm.state, new_ssm.conv)
+        x, (nst, ncv) = _scan_apply(body, x,
+                                    (cparams["layers"], st_all, cv_all), cfg)
+        new_state = DecodeState(None, (nst, ncv), None,
+                                state.length + s, state.enc)
+    elif cfg.family == "hybrid":
+        k_all, v_all = state.kv
+        st_all, cv_all = state.ssm
+
+        def body(carry, xs):
+            lp, kl, vl, st, cv = xs
+            cache = KVCache(kl, vl, state.pos, state.length)
+            y, nc, new_ssm, _ = blocks.apply_block(
+                lp, carry, cfg, "hybrid", positions=positions,
+                cache=cache, ssm_state=SSMState(st, cv))
+            return y, (nc.k, nc.v, new_ssm.state, new_ssm.conv)
+        x, (nk, nv, nst, ncv) = _scan_apply(
+            body, x, (cparams["layers"], k_all, v_all, st_all, cv_all), cfg)
+        new_state = DecodeState((nk, nv), (nst, ncv), new_pos,
+                                state.length + s, state.enc)
+    else:
+        k_all, v_all = state.kv
+        kind2 = "dec_cross" if cfg.is_encdec else kind
+
+        def body(carry, xs):
+            lp, kl, vl = xs
+            cache = KVCache(kl, vl, state.pos, state.length)
+            y, nc, _, _ = blocks.apply_block(
+                lp, carry, cfg, kind2, positions=positions,
+                cache=cache, enc=enc)
+            return y, (nc.k, nc.v)
+        x, (nk, nv) = _scan_apply(body, x, (cparams["layers"], k_all, v_all), cfg)
+        new_state = DecodeState((nk, nv), None, new_pos,
+                                state.length + s, state.enc)
+
+    x = rms_norm(x, cparams["final_norm"], cfg.norm_eps)
+    x_last = x[:, -1, :]
+    head = (cparams["tok_emb"].T if cfg.tie_embeddings else cparams["lm_head"])
+    logits = x_last @ head
+    return shard_constraint(logits, "batch", "vocab"), new_state
+
+
+def prefill(params, tokens: jax.Array, cfg: ModelConfig,
+            state: DecodeState):
+    """Process the prompt; returns (last-token logits, filled state)."""
+    if cfg.is_encdec and state.enc is None:
+        raise ValueError("enc-dec prefill needs encoder output in state.enc")
+    return _forward_cached(params, tokens, cfg, state)
+
+
+def decode_step(params, token: jax.Array, cfg: ModelConfig,
+                state: DecodeState):
+    """One decode step. token: [B, 1] -> (logits [B, vocab], new state)."""
+    return _forward_cached(params, token, cfg, state)
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Public encoder entry (whisper): stub frames -> encoder states."""
+    cparams = _cast_tree(params, cfg.dtypes.compute_dtype)
+    return _run_encoder(cparams, frames.astype(cfg.dtypes.compute_dtype), cfg)

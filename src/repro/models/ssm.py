@@ -1,0 +1,156 @@
+"""Mamba2 SSD (state-space duality) layer — training scan + O(1) decode.
+
+Implements the SSD recurrence (Dao & Gu 2024, arXiv:2405.21060) in its
+chunked form: within a chunk the quadratic "attention-like" dual form
+runs on the MXU; across chunks a small state [heads, head_dim, state]
+carries the recurrence.  This is the TPU-native adaptation: the CUDA
+kernel's warp-level scan becomes a jax.lax.scan over chunk states with
+dense intra-chunk einsums (MXU food), per the hardware-adaptation rule.
+
+Simplifications vs the full Mamba2 block (recorded in DESIGN.md):
+scalar-per-head A (as in the paper), single B/C group, depthwise conv
+on x only.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_constraint
+
+
+class SSMState(NamedTuple):
+    state: jax.Array       # [B, H, hd, N] inter-chunk SSD state
+    conv: jax.Array        # [B, conv_dim-1, d_inner] depthwise conv tail
+
+
+def init_ssm_state(batch: int, cfg, dtype) -> SSMState:
+    return SSMState(
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                         cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_dim - 1, cfg.d_inner), dtype),
+    )
+
+
+def _split_proj(p, x, cfg):
+    """in_proj -> (z gate [.., d_inner], x [.., d_inner], B [.., N],
+    C [.., N], dt [.., H])."""
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xin, b, c, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return z, xin, b, c, dt
+
+
+def _conv1d(xin: jax.Array, w: jax.Array, tail: Optional[jax.Array]):
+    """Causal depthwise conv over seq.  w: [conv_dim, d_inner].
+    Returns (y, new_tail)."""
+    kdim = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((xin.shape[0], kdim - 1, xin.shape[2]), xin.dtype)
+    else:
+        pad = tail.astype(xin.dtype)
+    xp = jnp.concatenate([pad, xin], axis=1)          # [B, S+k-1, di]
+    y = sum(xp[:, i: i + xin.shape[1], :] * w[i] for i in range(kdim))
+    new_tail = xp[:, xp.shape[1] - (kdim - 1):, :]
+    return jax.nn.silu(y), new_tail
+
+
+def ssd_chunked(
+    xin: jax.Array,       # [B, S, H, hd]  (post conv+silu, reshaped)
+    dt: jax.Array,        # [B, S, H]      softplus'd step sizes
+    a_log: jax.Array,     # [H]            log(-A)
+    b: jax.Array,         # [B, S, N]
+    c: jax.Array,         # [B, S, N]
+    chunk: int,
+    init_state: Optional[jax.Array] = None,   # [B, H, hd, N]
+    unroll: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """SSD forward. Returns (y [B,S,H,hd], final_state [B,H,hd,N])."""
+    bsz, s, h, hd = xin.shape
+    n = b.shape[-1]
+    nc = (s + chunk - 1) // chunk
+    pad = nc * chunk - s
+    if pad:
+        xin = jnp.pad(xin, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    a = -jnp.exp(a_log.astype(jnp.float32))                   # [H], a < 0
+    dt32 = dt.astype(jnp.float32)
+    da = dt32 * a[None, None, :]                              # [B, S', H]
+    # reshape to chunks
+    xin_c = xin.reshape(bsz, nc, chunk, h, hd)
+    dt_c = dt32.reshape(bsz, nc, chunk, h)
+    da_c = da.reshape(bsz, nc, chunk, h)
+    b_c = b.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    c_c = c.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+
+    cum = jnp.cumsum(da_c, axis=2)                            # [B,nc,L,H]
+    seg_total = cum[:, :, -1, :]                              # [B,nc,H]
+
+    def chunk_body(state, inp):
+        xin_i, dt_i, da_i, cum_i, tot_i, b_i, c_i = inp
+        # intra-chunk dual (attention-like) term
+        # L[s,t] = exp(cum[s] - cum[t]) for s >= t
+        rel = cum_i[:, :, None, :] - cum_i[:, None, :, :]      # [B,L,L,H]
+        causal = jnp.tril(jnp.ones((rel.shape[1], rel.shape[1]), bool))
+        # mask BEFORE exp: exp of the (large positive) acausal entries
+        # overflows and where()'s backward turns 0 * inf into NaN
+        rel = jnp.where(causal[None, :, :, None], rel, -1e30)
+        gamma = jnp.exp(rel)
+        cb = jnp.einsum("bln,btn->blt", c_i, b_i)              # [B,L,L]
+        w = cb[:, :, :, None] * gamma                          # [B,L,L,H]
+        xdt = xin_i.astype(jnp.float32) * dt_i[..., None]      # [B,L,H,hd]
+        y_intra = jnp.einsum("blth,bthd->blhd", w, xdt)
+        # inter-chunk: contribution of carried state
+        decay_in = jnp.exp(cum_i)                              # [B,L,H]
+        y_inter = jnp.einsum("bln,bhdn,blh->blhd", c_i, state, decay_in)
+        # state update: state' = exp(tot) * state + sum_t exp(tot-cum_t) * x_t dt_t b_t^T
+        decay_out = jnp.exp(tot_i[:, None, :] - cum_i)         # [B,L,H]
+        ds = jnp.einsum("blh,blhd,bln->bhdn", decay_out, xdt, b_i)
+        new_state = jnp.exp(tot_i)[:, :, None, None] * state + ds
+        return new_state, y_intra + y_inter
+
+    state0 = (init_state if init_state is not None
+              else jnp.zeros((bsz, h, hd, n), jnp.float32))
+    inputs = (
+        xin_c.swapaxes(0, 1), dt_c.swapaxes(0, 1), da_c.swapaxes(0, 1),
+        cum.swapaxes(0, 1), seg_total.swapaxes(0, 1),
+        b_c.swapaxes(0, 1), c_c.swapaxes(0, 1),
+    )
+    final_state, y = jax.lax.scan(chunk_body, state0, inputs,
+                                  unroll=nc if unroll else 1)
+    y = y.swapaxes(0, 1).reshape(bsz, nc * chunk, h, hd)[:, :s]
+    return y.astype(xin.dtype), final_state
+
+
+def ssm_apply(
+    p: dict,
+    x: jax.Array,            # [B, S, d_model]
+    cfg,
+    state: Optional[SSMState] = None,
+) -> Tuple[jax.Array, Optional[SSMState]]:
+    """Full Mamba2 mixer.  With ``state`` the call is incremental
+    (prefill appends S tokens; decode S=1) and returns the new state."""
+    bsz, s, _ = x.shape
+    z, xin, b, c, dt = _split_proj(p, x, cfg)
+    xin = shard_constraint(xin, "batch", "seq", "d_inner")
+    xin, new_conv = _conv1d(xin, p["conv_w"],
+                            state.conv if state is not None else None)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    h, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    xin_h = xin.reshape(bsz, s, h, hd)
+    y, new_state = ssd_chunked(
+        xin_h, dt, p["a_log"], b, c, cfg.ssm_chunk,
+        init_state=state.state if state is not None else None,
+        unroll=not cfg.scan_layers)
+    y = y + xin_h * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, cfg.d_inner)
+    y = y * jax.nn.silu(z)                       # gated output
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if state is not None:
+        return out, SSMState(new_state, new_conv)
+    return out, None

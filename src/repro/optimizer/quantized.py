@@ -1,0 +1,48 @@
+"""Blockwise int8 quantization for optimizer state and gradients.
+
+Dynamic blockwise quantization (Dettmers et al., 8-bit optimizers):
+flatten, split into blocks of 256, store int8 codes + one fp32 absmax
+scale per block.  Linear (not dynamic-tree) codes keep the kernel
+trivially vectorizable; measured quality loss on Adam moments is
+negligible at block 256.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class Q8State(NamedTuple):
+    codes: jax.Array    # int8  [n_blocks, BLOCK]
+    scales: jax.Array   # float32 [n_blocks]
+    size: int           # original element count (static)
+
+
+jax.tree_util.register_pytree_node(
+    Q8State,
+    lambda s: ((s.codes, s.scales), s.size),
+    lambda size, kids: Q8State(kids[0], kids[1], size),
+)
+
+
+def q8_quantize(x: jax.Array) -> Q8State:
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    absmax = jnp.max(jnp.abs(blocks), axis=1)
+    scales = jnp.maximum(absmax, 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(blocks / scales[:, None]), -127, 127
+                     ).astype(jnp.int8)
+    return Q8State(codes, scales, n)
+
+
+def q8_dequantize(s: Q8State, shape: Tuple[int, ...]) -> jax.Array:
+    flat = (s.codes.astype(jnp.float32) * s.scales[:, None]).reshape(-1)
+    return flat[: s.size].reshape(shape)

@@ -1,0 +1,21 @@
+"""Learning-rate schedules (pure functions of the step array)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup_schedule(step, *, warmup_steps: int, total_steps: int,
+                           min_ratio: float = 0.1):
+    """Linear warmup then cosine decay to min_ratio; returns a scale in
+    (0, 1] to multiply the base lr."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - warmup_steps) /
+                    jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos
+
+
+def linear_warmup_schedule(step, *, warmup_steps: int):
+    step = jnp.asarray(step, jnp.float32)
+    return jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)

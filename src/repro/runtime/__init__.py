@@ -1,0 +1,1 @@
+from repro.runtime.executor import ShardTaskExecutor  # noqa: F401

@@ -1,0 +1,116 @@
+"""Fault-tolerant shard-task executor (the query-side runtime).
+
+This is the Spark-executor analogue for EmApprox query jobs: per-shard
+tasks run on a worker pool with
+
+  * retry on failure (transient worker faults),
+  * straggler mitigation: when the slowest ~tail of tasks exceeds
+    ``straggler_factor``x the median completion time, duplicates are
+    speculatively launched and the first finisher wins (the classic
+    MapReduce backup-task trick),
+  * elastic worker count: pool size can change between jobs.
+
+On a TPU cluster the same policy applies at pod granularity (a pod is a
+worker; shards are its resident data) — the executor keeps that mapping
+abstract by operating on shard ids.  Failure injection for tests is via
+``fault_hook`` which may raise on chosen shards.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from typing import Any, Callable, Dict, Iterable, Optional, Sequence
+
+import numpy as np
+
+
+class ShardTaskError(RuntimeError):
+    pass
+
+
+class ShardTaskExecutor:
+    def __init__(
+        self,
+        workers: int = 4,
+        max_retries: int = 2,
+        straggler_factor: float = 3.0,
+        min_completed_for_speculation: int = 4,
+        fault_hook: Optional[Callable[[int, int], None]] = None,
+    ):
+        self.workers = workers
+        self.max_retries = max_retries
+        self.straggler_factor = straggler_factor
+        self.min_completed = min_completed_for_speculation
+        self.fault_hook = fault_hook  # (shard_id, attempt) -> None or raise
+        self.stats: Dict[str, int] = {"retries": 0, "speculative": 0}
+
+    def resize(self, workers: int) -> None:
+        """Elastic scaling between jobs."""
+        self.workers = max(1, workers)
+
+    def map_shards(
+        self,
+        corpus,
+        shard_ids: Sequence[int],
+        fn: Callable[[Any], Any],
+    ) -> Dict[int, Any]:
+        """Run ``fn(shard)`` for every id; returns {shard_id: result}."""
+        ids = [int(s) for s in shard_ids]
+        results: Dict[int, Any] = {}
+        attempts: Dict[int, int] = {i: 0 for i in ids}
+        lock = threading.Lock()
+
+        def run_one(sid: int) -> Any:
+            with lock:
+                attempts[sid] += 1
+                attempt = attempts[sid]
+            if self.fault_hook is not None:
+                self.fault_hook(sid, attempt)
+            return fn(corpus.shards[sid])
+
+        with ThreadPoolExecutor(max_workers=self.workers) as pool:
+            future_of: Dict[Future, int] = {
+                pool.submit(run_one, sid): sid for sid in ids}
+            started = {sid: time.perf_counter() for sid in ids}
+            durations: list = []
+            speculated: set = set()
+            pending = set(future_of)
+            while pending:
+                done, pending = wait(pending, timeout=0.05,
+                                     return_when=FIRST_COMPLETED)
+                now = time.perf_counter()
+                for fut in done:
+                    sid = future_of[fut]
+                    try:
+                        res = fut.result()
+                        if sid not in results:
+                            results[sid] = res
+                            durations.append(now - started[sid])
+                    except Exception:
+                        if attempts[sid] <= self.max_retries:
+                            self.stats["retries"] += 1
+                            nf = pool.submit(run_one, sid)
+                            future_of[nf] = sid
+                            pending.add(nf)
+                        elif sid not in results:
+                            raise ShardTaskError(
+                                f"shard {sid} failed after "
+                                f"{attempts[sid]} attempts")
+                # straggler speculation
+                if (len(durations) >= self.min_completed and pending):
+                    median = float(np.median(durations))
+                    for fut in list(pending):
+                        sid = future_of[fut]
+                        if (sid not in results and sid not in speculated and
+                                now - started[sid] >
+                                self.straggler_factor * max(median, 1e-4)):
+                            speculated.add(sid)
+                            self.stats["speculative"] += 1
+                            nf = pool.submit(run_one, sid)
+                            future_of[nf] = sid
+                            pending.add(nf)
+        missing = [s for s in ids if s not in results]
+        if missing:
+            raise ShardTaskError(f"shards never completed: {missing}")
+        return results

@@ -1,0 +1,8 @@
+"""Shared utilities: PRNG helpers, tree math, timing, dtype policies."""
+from repro.utils.trees import (  # noqa: F401
+    tree_bytes,
+    tree_global_norm,
+    tree_param_count,
+    tree_zeros_like,
+)
+from repro.utils.stats import t_critical_value  # noqa: F401

@@ -1,0 +1,41 @@
+"""Pytree math helpers used by the optimizer, checkpointing and tests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_param_count(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(x.size for x in leaves))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree (uses each leaf's dtype itemsize)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(x.size * x.dtype.itemsize for x in leaves))
+
+
+def tree_global_norm(tree) -> jax.Array:
+    """L2 norm across every leaf of the pytree (fp32 accumulation)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    return jnp.sqrt(sq)
+
+
+def tree_zeros_like(tree, dtype=None):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree
+    )
+
+
+def tree_cast(tree, dtype):
+    """Cast all floating leaves to ``dtype``; leave integer leaves alone."""
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(cast, tree)

@@ -1,0 +1,96 @@
+"""LSH properties: packing roundtrip, cosine preservation, asym scoring."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lsh import (
+    LSHConfig,
+    LSHIndex,
+    asymmetric_cosine,
+    hamming_distance,
+    hamming_similarity,
+    hyperplanes,
+    pack_bits,
+    popcount32,
+    signature_bits,
+    unpack_bits,
+)
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=50, deadline=None)
+def test_popcount_matches_python(x):
+    got = int(popcount32(jnp.asarray([x], jnp.uint32))[0])
+    assert got == bin(x).count("1")
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 8), words=st.integers(1, 4), seed=st.integers(0, 999))
+def test_pack_unpack_roundtrip(n, words, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (n, words * 32)).astype(np.uint8)
+    packed = pack_bits(jnp.asarray(bits))
+    back = unpack_bits(packed, words * 32)
+    np.testing.assert_array_equal(np.asarray(back), bits)
+
+
+def test_hamming_distance_exact():
+    a = pack_bits(jnp.asarray(np.eye(4, 64, dtype=np.uint8)))
+    d = hamming_distance(a, a)
+    assert (np.diag(np.asarray(d)) == 0).all()
+    off = np.asarray(d)[~np.eye(4, dtype=bool)]
+    assert (off == 2).all()   # two differing one-hot bits
+
+
+def test_cosine_preservation():
+    """Hamming-angle estimate tracks true cosine (paper Sec. II-D)."""
+    rng = np.random.default_rng(3)
+    dim, bits = 48, 512
+    x = rng.normal(size=(60, dim))
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    planes = hyperplanes(LSHConfig(bits=bits), dim)
+    packed = pack_bits(signature_bits(jnp.asarray(x, jnp.float32), planes))
+    m = np.asarray(hamming_distance(packed, packed)).astype(float)
+    est_cos = np.cos(np.pi * m / bits)
+    true_cos = x @ x.T
+    err = np.abs(est_cos - true_cos)
+    assert err.mean() < 0.06
+    assert err.max() < 0.25
+
+
+def test_asymmetric_beats_symmetric():
+    """Asym scoring quantizes one side only -> lower cos error."""
+    rng = np.random.default_rng(4)
+    dim, bits = 48, 128
+    db = rng.normal(size=(200, dim))
+    db /= np.linalg.norm(db, axis=1, keepdims=True)
+    q = rng.normal(size=(dim,))
+    q /= np.linalg.norm(q)
+    planes = hyperplanes(LSHConfig(bits=bits), dim)
+    db_packed = pack_bits(signature_bits(jnp.asarray(db, jnp.float32), planes))
+    q_packed = pack_bits(signature_bits(jnp.asarray(q[None], jnp.float32), planes))
+    true_cos = db @ q
+    sym = np.cos(np.pi * np.asarray(
+        hamming_distance(q_packed, db_packed))[0].astype(float) / bits)
+    asym = np.asarray(asymmetric_cosine(
+        jnp.asarray(q, jnp.float32), db_packed, planes, bits))
+    assert np.abs(asym - true_cos).mean() < np.abs(sym - true_cos).mean()
+
+
+def test_lsh_index_api():
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(32, 16)).astype(np.float32)
+    idx = LSHIndex.build(jnp.asarray(x), LSHConfig(bits=64))
+    sims = idx.similarities(jnp.asarray(x[0]))
+    assert int(np.argmax(np.asarray(sims))) == 0
+
+
+def test_temperature_sharpens():
+    rng = np.random.default_rng(6)
+    a = pack_bits(jnp.asarray(rng.integers(0, 2, (4, 128)).astype(np.uint8)))
+    s1 = np.asarray(hamming_similarity(a, a, 128, temperature=1.0))
+    s8 = np.asarray(hamming_similarity(a, a, 128, temperature=8.0))
+    r1 = s1.max() / s1.min()
+    r8 = s8.max() / s8.min()
+    assert r8 > r1

@@ -1,0 +1,157 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step
+on CPU, shape + finiteness assertions, decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import model as M
+from repro.models.config import DTypePolicy
+
+ARCHS = list_archs()
+FP32 = DTypePolicy(params="float32", compute="float32", kv_cache="float32")
+
+
+def _batch(cfg, b=2, s=24, key=jax.random.PRNGKey(0)):
+    batch = {
+        "tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+        "mask": jnp.ones((b, s), jnp.float32),
+    }
+    if cfg.is_encdec:
+        batch["enc_inputs"] = jax.random.normal(
+            key, (b, cfg.encoder_seq, cfg.d_model))
+    elif cfg.family == "vlm":
+        batch["enc_inputs"] = jax.random.normal(
+            key, (b, cfg.vision_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits = M.forward(params, batch["tokens"], cfg,
+                       enc_inputs=batch.get("enc_inputs"))
+    assert logits.shape == (2, 24, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_runs(arch):
+    from repro.launch.steps import make_train_step
+    from repro.optimizer.adamw import AdamWConfig, adamw_init
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=1e-3)
+    opt_state = adamw_init(params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    batch = _batch(cfg)
+    params, opt_state, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(opt_state.step) == 1
+
+
+@pytest.mark.parametrize("arch,lr", [("smollm_360m", 5e-3),
+                                     ("qwen2_5_14b", 5e-3),
+                                     ("mamba2_780m", 1e-3),
+                                     ("hymba_1_5b", 1e-3),
+                                     ("llama4_scout_17b_a16e", 5e-3)])
+def test_loss_decreases(arch, lr):
+    # SSM archs get a smaller lr: the SSD recurrence is sensitive to
+    # dt/a_log early in training and 5e-3 can overshoot in 8 steps.
+    from repro.launch.steps import make_train_step
+    from repro.optimizer.adamw import AdamWConfig, adamw_init
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=lr)
+    opt_state = adamw_init(params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg, warmup_steps=1))
+    batch = _batch(cfg, b=4, s=32)
+    losses = []
+    for _ in range(10):
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert min(losses[1:]) < losses[0]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    """Teacher-forced forward == incremental decode (fp32 cache).
+
+    MoE needs drop-free capacity here: capacity is computed per dispatch
+    group, so decode (1-token groups) and full forward (S-token groups)
+    drop different tokens under a tight capacity factor — that is
+    expected behaviour, not a bug, so we remove dropping from the
+    equation."""
+    cfg = dataclasses.replace(get_config(arch, smoke=True), dtypes=FP32)
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, capacity_factor=64.0)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    b, s = 2, 12
+    key = jax.random.PRNGKey(2)
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    enc_in = None
+    enc_state = None
+    if cfg.is_encdec:
+        enc_in = jax.random.normal(key, (b, cfg.encoder_seq, cfg.d_model))
+        enc_state = M.encode(params, enc_in, cfg)
+    elif cfg.family == "vlm":
+        enc_in = jax.random.normal(key, (b, cfg.vision_tokens, cfg.d_model))
+        enc_state = enc_in
+    full = np.asarray(M.forward(params, toks, cfg, enc_inputs=enc_in))
+    state = M.init_decode_state(cfg, b, 32, enc=enc_state)
+    _, state = M.prefill(params, toks[:, :s - 1], cfg, state)
+    dec, state = M.decode_step(params, toks[:, s - 1:s], cfg, state)
+    scale = np.max(np.abs(full[:, -1])) + 1e-9
+    assert np.max(np.abs(np.asarray(dec) - full[:, -1])) / scale < 5e-3
+
+
+def test_sliding_window_ring_buffer():
+    """Hymba ring cache: decoding past the window stays consistent with
+    a windowed full forward."""
+    cfg = dataclasses.replace(get_config("hymba_1_5b", smoke=True),
+                              dtypes=FP32)
+    # tiny window so we wrap quickly
+    cfg = dataclasses.replace(cfg, sliding_window=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    b, s = 1, 20
+    toks = jax.random.randint(jax.random.PRNGKey(4), (b, s), 0,
+                              cfg.vocab_size)
+    full = np.asarray(M.forward(params, toks, cfg))
+    state = M.init_decode_state(cfg, b, 64)
+    errs = []
+    for t in range(s):
+        lg, state = M.decode_step(params, toks[:, t:t + 1], cfg, state)
+        errs.append(np.max(np.abs(np.asarray(lg) - full[:, t])))
+    assert max(errs) / (np.max(np.abs(full)) + 1e-9) < 5e-3
+
+
+def test_param_counts_match_assignment():
+    """Full-size analytic param counts are in the advertised ballpark."""
+    expect = {
+        "smollm_360m": (0.25e9, 0.6e9),
+        "qwen2_5_14b": (12e9, 16e9),
+        "starcoder2_3b": (2.5e9, 4.5e9),  # SwiGLU vs 2-mat MLP (DESIGN.md)
+        "internlm2_20b": (17e9, 23e9),
+        "mamba2_780m": (0.6e9, 1.0e9),
+        "hymba_1_5b": (1.0e9, 2.0e9),
+        "llama4_scout_17b_a16e": (90e9, 115e9),
+        "llama4_maverick_400b_a17b": (350e9, 450e9),
+        "llama_3_2_vision_11b": (8e9, 13e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count_estimate()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.1f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_long_context_support_flags():
+    assert get_config("mamba2_780m").supports_long_context
+    assert get_config("hymba_1_5b").supports_long_context
+    for arch in ("smollm_360m", "qwen2_5_14b", "llama4_scout_17b_a16e",
+                 "whisper_small", "llama_3_2_vision_11b"):
+        assert not get_config(arch).supports_long_context

@@ -1,0 +1,113 @@
+"""Query-layer behaviour over the shared small corpus + index."""
+import numpy as np
+import pytest
+
+from repro.core.queries.aggregation import phrase_count_query, precise_phrase_count
+from repro.core.queries.recommend import mse as rec_mse, recommend_query
+from repro.core.queries.retrieval import (
+    BoolExpr,
+    boolean_query,
+    parse_boolean,
+    precision_at_k,
+    ranked_query,
+    recall,
+)
+
+
+def _frequent_word(corpus):
+    counts = np.bincount(
+        np.concatenate([s.tokens for s in corpus.shards]),
+        minlength=corpus.vocab_size)
+    return int(np.argsort(-counts)[40])   # frequent but not stopword-tier
+
+
+def test_rate_one_is_exact(small_corpus, built_index):
+    w = _frequent_word(small_corpus)
+    res = phrase_count_query(small_corpus, built_index, [w], 1.0)
+    assert res.estimate.value == precise_phrase_count(small_corpus, [w])
+    assert res.estimate.error_bound == 0.0
+
+
+def test_estimate_converges_with_rate(small_corpus, built_index):
+    w = _frequent_word(small_corpus)
+    true = precise_phrase_count(small_corpus, [w])
+    rng = np.random.default_rng(0)
+    errs = {}
+    for rate in (0.2, 0.6):
+        trials = [abs(phrase_count_query(
+            small_corpus, built_index, [w], rate, rng=rng
+        ).estimate.value - true) / true for _ in range(8)]
+        errs[rate] = np.mean(trials)
+    assert errs[0.6] <= errs[0.2] + 0.05
+
+
+def test_estimated_bound_usually_covers(small_corpus, built_index):
+    w = _frequent_word(small_corpus)
+    true = precise_phrase_count(small_corpus, [w])
+    rng = np.random.default_rng(1)
+    cover = 0
+    for _ in range(20):
+        r = phrase_count_query(small_corpus, built_index, [w], 0.4, rng=rng)
+        lo, hi = r.estimate.interval
+        cover += (lo <= true <= hi)
+    assert cover >= 14   # ~95% nominal, allow slack on 20 trials
+
+
+def test_boolean_parse_and_eval(small_corpus, built_index):
+    w1, w2 = 5, 9
+    expr = parse_boolean([w1, "and", w2])
+    full = boolean_query(small_corpus, built_index, expr, 1.0)
+    approx = boolean_query(small_corpus, built_index, expr, 0.5)
+    r = recall(approx.doc_ids, full.doc_ids)
+    assert 0.0 <= r <= 1.0
+    assert set(approx.doc_ids).issubset(set(full.doc_ids))
+
+
+def test_boolean_parser_precedence():
+    e = parse_boolean([1, "or", 2, "and", 3])
+    assert e.op == "or"
+    assert e.right.op == "and"
+    e2 = parse_boolean(["(", 1, "or", 2, ")", "and", 3])
+    assert e2.op == "and"
+
+
+def test_ranked_retrieval_topk(small_corpus, built_index):
+    words = [_frequent_word(small_corpus), 17]
+    full = ranked_query(small_corpus, built_index, words, 1.0, k=10)
+    assert len(full.doc_ids) == 10
+    approx = ranked_query(small_corpus, built_index, words, 0.6, k=10)
+    p = precision_at_k(approx.doc_ids, full.doc_ids, 10)
+    assert p >= 0.3  # sampled BM25 should overlap substantially
+
+
+def test_higher_rate_reads_more_shards(small_corpus, built_index):
+    w = _frequent_word(small_corpus)
+    rng = np.random.default_rng(2)
+    lo = phrase_count_query(small_corpus, built_index, [w], 0.1, rng=rng)
+    hi = phrase_count_query(small_corpus, built_index, [w], 0.5, rng=rng)
+    assert hi.shards_read > lo.shards_read
+    assert lo.data_fraction < 0.35
+
+
+def test_recommend_pipeline():
+    from repro.core.index import build_index
+    from repro.core.lsh import LSHConfig
+    from repro.core.pv_dbow import PVDBOWConfig, train_pv_dbow
+    from repro.data.corpus import ReviewCorpusConfig, generate_review_corpus
+    from repro.data.store import ShardedCorpus
+
+    data = generate_review_corpus(ReviewCorpusConfig(
+        n_users=120, n_items=60, vocab_size=1024, n_topics=6, seed=3))
+    corpus = ShardedCorpus.from_documents(data.user_docs, 1024,
+                                          shard_tokens=4096)
+    pcfg = PVDBOWConfig(dim=16, steps=150, batch_pairs=1024)
+    index = build_index(corpus, train_pv_dbow(corpus, pcfg),
+                        LSHConfig(bits=64), temperature=pcfg.temperature)
+    res = recommend_query(corpus, index, data, target_user=3, rate=0.5)
+    assert res.predictions, "no predictions produced"
+    for item, pred in res.predictions.items():
+        assert 1.0 <= pred <= 5.0
+    truth_mask = data.user_of == 3
+    m = rec_mse(res.predictions, data.item_of[truth_mask],
+                data.ratings[truth_mask])
+    assert np.isfinite(m)

@@ -1,0 +1,92 @@
+"""Estimator properties: unbiasedness, coverage, pps variance reduction."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sampling import (
+    ht_estimate,
+    mean_estimate,
+    pps_sample,
+    similarity_probabilities,
+    srcs_sample,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_shards=st.integers(4, 40),
+    seed=st.integers(0, 10_000),
+    skew=st.floats(2.5, 6.0),   # pareto alpha > 2: finite variance, so
+                                # 400 trials actually concentrate
+)
+def test_ht_estimator_unbiased(n_shards, seed, skew):
+    """E[tau_hat] == tau under pps sampling for any positive phi."""
+    rng = np.random.default_rng(seed)
+    tau_s = rng.pareto(skew, n_shards) * 100
+    tau = tau_s.sum()
+    phi = similarity_probabilities(rng.random(n_shards) + 0.1)
+    est = []
+    for _ in range(400):
+        s = pps_sample(phi, 0.3, rng)
+        est.append(ht_estimate(tau_s[s.shard_ids], s).value)
+    assert np.mean(est) == pytest.approx(tau, rel=0.2)
+
+
+def test_pps_beats_uniform_when_phi_matches_tau():
+    """phi proportional to tau_s drives variance toward zero (paper
+    Sec. II-B: optimal pps)."""
+    rng = np.random.default_rng(0)
+    tau_s = np.concatenate([np.full(5, 1000.0), np.full(45, 1.0)])
+    phi_opt = tau_s / tau_s.sum()
+    uni, opt = [], []
+    for _ in range(300):
+        s1 = srcs_sample(50, 0.2, rng)
+        uni.append(ht_estimate(tau_s[s1.shard_ids], s1).value)
+        s2 = pps_sample(phi_opt, 0.2, rng)
+        opt.append(ht_estimate(tau_s[s2.shard_ids], s2).value)
+    assert np.std(opt) < 0.2 * np.std(uni)
+
+
+def test_error_bound_coverage():
+    """95% interval should cover the truth ~>=85% of the time (t-based
+    bounds are approximate for skewed small samples)."""
+    rng = np.random.default_rng(1)
+    tau_s = rng.gamma(2.0, 50.0, 64)
+    tau = tau_s.sum()
+    phi = similarity_probabilities(tau_s + rng.random(64) * 50)
+    cover = 0
+    trials = 300
+    for _ in range(trials):
+        s = pps_sample(phi, 0.25, rng)
+        e = ht_estimate(tau_s[s.shard_ids], s)
+        lo, hi = e.interval
+        cover += (lo <= tau <= hi)
+    assert cover / trials >= 0.85
+
+
+def test_mean_estimate_ratio():
+    rng = np.random.default_rng(2)
+    sums = rng.random(30) * 100
+    counts = np.maximum(rng.poisson(20, 30), 1).astype(float)
+    true_mean = sums.sum() / counts.sum()
+    phi = np.full(30, 1 / 30)
+    vals = []
+    for _ in range(200):
+        s = srcs_sample(30, 0.4, rng)
+        vals.append(mean_estimate(sums[s.shard_ids], counts[s.shard_ids], s).value)
+    assert np.mean(vals) == pytest.approx(true_mean, rel=0.05)
+
+
+@given(st.integers(2, 100), st.floats(0.01, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_sample_sizes(n_shards, rate):
+    rng = np.random.default_rng(0)
+    s = srcs_sample(n_shards, rate, rng)
+    assert 1 <= len(s.shard_ids) == int(np.ceil(rate * n_shards))
+    assert s.probabilities.sum() == pytest.approx(1.0)
+
+
+def test_similarity_probabilities_floor():
+    p = similarity_probabilities(np.array([0.0, 0.0, 1.0]))
+    assert (p > 0).all() and p.sum() == pytest.approx(1.0)
+    assert p[2] > p[0]

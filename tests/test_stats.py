@@ -1,0 +1,35 @@
+"""t critical values vs tabulated references."""
+import pytest
+
+from repro.utils.stats import t_critical_value
+
+# (df, 95% two-sided critical value) from standard t tables
+TABLE_95 = [
+    (1, 12.706), (2, 4.303), (3, 3.182), (4, 2.776), (5, 2.571),
+    (10, 2.228), (20, 2.086), (30, 2.042), (60, 2.000), (120, 1.980),
+]
+
+TABLE_99 = [(5, 4.032), (10, 3.169), (30, 2.750), (120, 2.617)]
+
+
+@pytest.mark.parametrize("df,expected", TABLE_95)
+def test_t95(df, expected):
+    assert t_critical_value(df, 0.95) == pytest.approx(expected, abs=5e-3)
+
+
+@pytest.mark.parametrize("df,expected", TABLE_99)
+def test_t99(df, expected):
+    assert t_critical_value(df, 0.99) == pytest.approx(expected, abs=1e-2)
+
+
+def test_monotone_in_confidence():
+    assert t_critical_value(10, 0.99) > t_critical_value(10, 0.95)
+
+
+def test_limits_to_normal():
+    assert t_critical_value(10000, 0.95) == pytest.approx(1.96, abs=1e-2)
+
+
+def test_invalid():
+    with pytest.raises(ValueError):
+        t_critical_value(0)

@@ -1,0 +1,75 @@
+"""Document store: phrase counting oracle, reallocation, boundaries."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.store import (
+    DocShard,
+    Document,
+    ShardedCorpus,
+    count_phrase_in_shard,
+    docs_matching_all,
+)
+
+
+def naive_count(docs, phrase):
+    total = 0
+    k = len(phrase)
+    for d in docs:
+        t = d.tokens.tolist()
+        total += sum(1 for i in range(len(t) - k + 1)
+                     if t[i:i + k] == list(phrase))
+    return total
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 5000),
+    n_docs=st.integers(1, 12),
+    vocab=st.integers(2, 6),
+    k=st.integers(1, 3),
+)
+def test_count_phrase_matches_naive(seed, n_docs, vocab, k):
+    """Property: vectorized n-gram counting == naive scan, never
+    crossing document boundaries."""
+    rng = np.random.default_rng(seed)
+    docs = [Document(i, rng.integers(0, vocab, rng.integers(0, 20)).astype(np.int32))
+            for i in range(n_docs)]
+    shard = DocShard.from_documents(0, docs)
+    phrase = rng.integers(0, vocab, k).tolist()
+    assert count_phrase_in_shard(shard, phrase) == naive_count(docs, phrase)
+
+
+def test_phrase_never_crosses_boundary():
+    docs = [Document(0, np.asarray([1, 2], np.int32)),
+            Document(1, np.asarray([3, 4], np.int32))]
+    shard = DocShard.from_documents(0, docs)
+    assert count_phrase_in_shard(shard, [2, 3]) == 0
+    assert count_phrase_in_shard(shard, [1, 2]) == 1
+
+
+def test_reallocate_preserves_documents(small_corpus):
+    n = small_corpus.n_docs
+    rng = np.random.default_rng(0)
+    assign = rng.integers(0, 7, n)
+    new = small_corpus.reallocate(assign, 7)
+    assert new.n_docs == n
+    assert new.n_tokens == small_corpus.n_tokens
+    # every doc in its assigned shard
+    m = new.doc_shard_map()
+    np.testing.assert_array_equal(m, assign)
+
+
+def test_docs_matching_all():
+    docs = [Document(0, np.asarray([1, 2, 3], np.int32)),
+            Document(1, np.asarray([1, 1], np.int32)),
+            Document(2, np.asarray([], np.int32))]
+    shard = DocShard.from_documents(5, docs)
+    np.testing.assert_array_equal(docs_matching_all(shard, [1, 2]), [0])
+    np.testing.assert_array_equal(docs_matching_all(shard, [1]), [0, 1])
+
+
+def test_corpus_shard_budget(small_corpus):
+    # sequential allocation: every shard except the last near the budget
+    sizes = small_corpus.shard_token_counts()
+    assert (sizes[:-1] >= 4096).all()
