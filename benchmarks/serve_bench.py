@@ -1,0 +1,190 @@
+"""Serving throughput: batched engine vs per-query execution.
+
+Measures queries/sec and p50 latency for three execution modes of the
+same mixed workload (aggregation / Boolean / ranked, paper Table I):
+
+  per_query_scan  - legacy path: one query at a time, per-shard
+                    operators rescan the flat token arrays (the
+                    pre-postings serving path, kept via the *_scan
+                    parity references)
+  per_query       - one query at a time through the current
+                    single-query entry points (postings-backed)
+  batched         - ``QueryBatch``: one-pass batched scoring, shared
+                    shard scans, per-shard postings
+
+Each mode runs ``trials`` times and the best wall time is reported
+(the container CPU is shared; best-of filters scheduler noise).
+Emits ``BENCH_serve.json`` (path overridable via ``BENCH_SERVE_JSON``)
+so future PRs have a serving-perf trajectory to compare against.
+
+  PYTHONPATH=src python -m benchmarks.serve_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, pick_query_words, text_setup
+
+
+def _mixed_queries(corpus, n, rng):
+    from repro.core.queries import BatchQuery, parse_boolean
+    words = pick_query_words(corpus, 3 * n, rng)
+    if len(words) < 3:
+        raise ValueError("corpus has too few mid-frequency candidate words "
+                         f"for the serve bench ({len(words)} < 3)")
+    qs = []
+    for i in range(n):
+        # pick_query_words caps at the candidate-pool size; recycle by
+        # modulo so large n_queries never indexes past the end
+        w = [int(words[(3 * i + j) % len(words)]) for j in range(3)]
+        kind = i % 3
+        if kind == 0:
+            qs.append(BatchQuery.count([w[0]]))
+        elif kind == 1:
+            qs.append(BatchQuery.boolean(
+                parse_boolean([w[0], "or", w[1], "and", w[2]])))
+        else:
+            qs.append(BatchQuery.ranked(w, k=10))
+    return qs
+
+
+def _run_per_query(corpus, index, queries, rate, executor, seed):
+    """Current single-query entry points, one query at a time."""
+    from repro.core.queries import (boolean_query, phrase_count_query,
+                                    ranked_query)
+    rng = np.random.default_rng(seed)
+    lat = []
+    for q in queries:
+        t0 = time.perf_counter()
+        if q.kind == "count":
+            phrase_count_query(corpus, index, q.phrase, rate, rng=rng,
+                               executor=executor)
+        elif q.kind == "bool":
+            boolean_query(corpus, index, q.expr, rate, rng=rng,
+                          executor=executor)
+        else:
+            ranked_query(corpus, index, q.words, rate, k=q.k, rng=rng,
+                         executor=executor)
+        lat.append(time.perf_counter() - t0)
+    return lat
+
+
+def _run_per_query_scan(corpus, index, queries, rate, executor, seed):
+    """The pre-postings serving path: single-query planning + flat-scan
+    per-shard operators (``*_scan`` parity references)."""
+    from repro.core.queries.retrieval import (_expr_eval_docs_scan,
+                                              _expr_shard_similarity,
+                                              bm25_scores_for_shard_scan)
+    from repro.core.sampling import (ht_estimate, pps_sample,
+                                     similarity_probabilities, unique_shards)
+    from repro.data.store import count_phrase_in_shard
+    rng = np.random.default_rng(seed)
+    lat = []
+    for q in queries:
+        t0 = time.perf_counter()
+        if q.kind == "bool":
+            sims = _expr_shard_similarity(q.expr, index)
+            probs = similarity_probabilities(sims)
+        else:
+            probs = index.shard_probabilities(
+                q.phrase if q.kind == "count" else q.words)
+        sample = pps_sample(probs, rate, rng)
+        distinct = unique_shards(sample)
+        if q.kind == "count":
+            by = executor.map_shards(
+                corpus, distinct,
+                lambda s, q=q: count_phrase_in_shard(s, q.phrase))
+            local = np.asarray([by[int(s)] for s in sample.shard_ids],
+                               np.float64)
+            ht_estimate(local, sample)
+        elif q.kind == "bool":
+            executor.map_shards(
+                corpus, distinct,
+                lambda s, q=q: s.doc_ids[_expr_eval_docs_scan(q.expr, s)])
+        else:
+            by = executor.map_shards(
+                corpus, distinct,
+                lambda s, q=q: (s.doc_ids, bm25_scores_for_shard_scan(
+                    s, q.words, index.doc_freq, index.n_docs,
+                    index.avg_doc_len)))
+            sc = np.concatenate([by[int(s)][1] for s in distinct])
+            np.argsort(-sc, kind="stable")[:q.k]
+        lat.append(time.perf_counter() - t0)
+    return lat
+
+
+def _run_batched(corpus, index, queries, rate, executor, seed, batch_size):
+    from repro.core.queries import QueryBatch
+    engine = QueryBatch(corpus, index, executor=executor)
+    rng = np.random.default_rng(seed)
+    lat = []
+    for i in range(0, len(queries), batch_size):
+        chunk = queries[i:i + batch_size]
+        t0 = time.perf_counter()
+        engine.execute(chunk, rate, rng=rng)
+        lat.append((time.perf_counter() - t0, len(chunk)))
+    return lat
+
+
+def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
+        workers: int = 2, trials: int = 3, out_path: str = None) -> dict:
+    setup = text_setup()
+    corpus, index = setup["corpus"], setup["index"]
+    from repro.runtime.executor import ShardTaskExecutor
+    executor = ShardTaskExecutor(workers=workers)
+    rng = np.random.default_rng(11)
+    queries = _mixed_queries(corpus, n_queries, rng)
+
+    arms = {
+        "per_query_scan": lambda seed: _run_per_query_scan(
+            corpus, index, queries, rate, executor, seed),
+        "per_query": lambda seed: _run_per_query(
+            corpus, index, queries, rate, executor, seed),
+        "batched": lambda seed: _run_batched(
+            corpus, index, queries, rate, executor, seed, batch_size),
+    }
+    report = {}
+    for name, arm in arms.items():
+        arm(0)  # warm (postings caches, jit, thread pools)
+        best, best_lat = None, None
+        for t in range(trials):
+            t0 = time.perf_counter()
+            lat = arm(1 + t)
+            dt = time.perf_counter() - t0
+            if best is None or dt < best:
+                best, best_lat = dt, lat
+        if name == "batched":
+            p50 = float(np.percentile([t / n for t, n in best_lat], 50))
+        else:
+            p50 = float(np.percentile(best_lat, 50))
+        report[name] = dict(qps=n_queries / best, p50_ms=p50 * 1e3,
+                            wall_s=best)
+        csv_row(f"serve_{name}", 1e6 * best / n_queries,
+                f"qps={report[name]['qps']:.1f}")
+
+    report["speedup_batched_vs_per_query"] = (
+        report["per_query"]["wall_s"] / report["batched"]["wall_s"])
+    report["speedup_batched_vs_scan"] = (
+        report["per_query_scan"]["wall_s"] / report["batched"]["wall_s"])
+    report["config"] = dict(n_queries=n_queries, rate=rate,
+                            batch_size=batch_size, workers=workers,
+                            trials=trials, n_shards=corpus.n_shards,
+                            executor_stats=dict(executor.stats))
+    csv_row("serve_speedup_batched_vs_per_query", 0.0,
+            f"{report['speedup_batched_vs_per_query']:.2f}x")
+    csv_row("serve_speedup_batched_vs_scan", 0.0,
+            f"{report['speedup_batched_vs_scan']:.2f}x")
+
+    out_path = out_path or os.environ.get("BENCH_SERVE_JSON",
+                                          "BENCH_serve.json")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+if __name__ == "__main__":
+    run()

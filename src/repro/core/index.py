@@ -11,6 +11,17 @@ Query-time API (paper Fig. 2 step a1): compose a query vector from word
 vectors, score it against shard signatures (XOR+popcount Hamming ->
 exp-cosine), normalize into sampling probabilities.
 
+Batched scoring (the serving hot path): ``shard_similarities_batch``
+and ``_exp_sim_batch`` score a [B, dim] block of query vectors against
+every target signature in one pass — the asym path becomes a single
+[M, bits] @ [bits, B] GEMM instead of B GEMVs, the sym path packs all
+B query signatures once and rides the Hamming kernel's multi-query
+``tn`` tiles, and the asym+kernel path runs the fused Pallas kernel in
+``kernels/asym`` (projection + sign-matmul + exp-cosine in VMEM).
+Single-query scoring stays on the latency-tuned numpy path; batched
+scoring trades a little latency for throughput and is what
+``core/queries/batch.QueryBatch`` uses.
+
 The index is deliberately tiny relative to the corpus (paper Table II:
 125 MB for 62 GB) — LSH compresses each 100-dim fp32 vector 64x.  Here
 the exact compression is dim*4*8/bits bits per item.
@@ -70,25 +81,29 @@ class ApproxIndex:
         q = self.word_vecs[np.asarray(list(word_ids), np.int64)].sum(axis=0)
         return q
 
-    def _signs_cache(self, target_sig: np.ndarray) -> np.ndarray:
+    def _signs_cache(self, target_sig: np.ndarray, role: str) -> np.ndarray:
         """Unpacked ±1 sign matrix for asym scoring, cached per target
         set.  Pure numpy keeps single-query latency at ~100 us; routing
         tiny index lookups through jax device dispatch costs ~3-50 ms
-        per query (measured), swamping the similarity math itself."""
-        key = id(target_sig)
+        per query (measured), swamping the similarity math itself.
+
+        ``role`` ("shard" | "doc" | "word") is the cache key: keying on
+        ``id(target_sig)`` — the old scheme — is unsound because ids are
+        reused after garbage collection, so a stale entry could be
+        served for a different signature array."""
         cache = getattr(self, "_signs", None)
         if cache is None:
             cache = {}
             object.__setattr__(self, "_signs", cache)
-        if key not in cache:
+        if role not in cache:
             bits = np.unpackbits(
                 target_sig.view(np.uint8), bitorder="little",
             ).reshape(target_sig.shape[0], -1)[:, : self.bits]
-            cache[key] = (2.0 * bits - 1.0).astype(np.float32)
-        return cache[key]
+            cache[role] = (2.0 * bits - 1.0).astype(np.float32)
+        return cache[role]
 
     def _exp_sim(self, vec: np.ndarray, target_sig: np.ndarray,
-                 target_vecs: np.ndarray) -> np.ndarray:
+                 target_vecs: np.ndarray, role: str) -> np.ndarray:
         """exp(beta * cos) similarity of one vector against a signed set."""
         if self.use_lsh and self.lsh_mode == "asym":
             if self.use_kernel:
@@ -100,7 +115,7 @@ class ApproxIndex:
                 q = np.asarray(vec, np.float64)
                 q = q / max(np.linalg.norm(q), 1e-9)
                 proj = (self.planes.astype(np.float64) @ q).astype(np.float32)
-                signs = self._signs_cache(target_sig)
+                signs = self._signs_cache(target_sig, role)
                 scale = 1.0 / (self.bits * np.sqrt(2.0 / np.pi))
                 cos = np.clip(signs @ proj * scale, -1.0, 1.0).astype(np.float64)
             return np.exp(self.temperature * cos)
@@ -124,6 +139,51 @@ class ApproxIndex:
         qn = q / max(np.linalg.norm(q), 1e-9)
         return np.exp(self.temperature * (target_vecs.astype(np.float64) @ qn))
 
+    def _exp_sim_batch(self, vecs: np.ndarray, target_sig: np.ndarray,
+                       target_vecs: np.ndarray, role: str) -> np.ndarray:
+        """exp(beta * cos) of a [B, dim] query block against a signed
+        set; returns [B, M] float64.
+
+        Matches ``_exp_sim`` row-for-row (same projection dtype walk)
+        but runs every query in one pass: the asym path is a single
+        [M, bits] @ [bits, B] GEMM, the sym path packs B signatures at
+        once and scores through the multi-query Hamming tiles, and the
+        asym+kernel path uses the fused Pallas kernel in kernels/asym.
+        """
+        vecs = np.atleast_2d(np.asarray(vecs))
+        if self.use_lsh and self.lsh_mode == "asym":
+            if self.use_kernel:
+                from repro.kernels.asym import ops as asym_ops
+                sims = asym_ops.asym_exp_similarity(
+                    jnp.asarray(vecs, jnp.float32), jnp.asarray(target_sig),
+                    jnp.asarray(self.planes), self.bits,
+                    temperature=self.temperature)
+                return np.asarray(sims, np.float64)
+            q = np.asarray(vecs, np.float64)
+            q = q / np.maximum(
+                np.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+            proj = (self.planes.astype(np.float64) @ q.T).astype(np.float32)
+            signs = self._signs_cache(target_sig, role)      # [M, bits]
+            scale = 1.0 / (self.bits * np.sqrt(2.0 / np.pi))
+            cos = np.clip(signs @ proj * scale, -1.0, 1.0)   # [M, B]
+            return np.exp(self.temperature * cos.astype(np.float64)).T
+        if self.use_lsh:
+            qsig = lsh_mod.pack_bits(lsh_mod.signature_bits(
+                jnp.asarray(vecs, jnp.float32), jnp.asarray(self.planes)))
+            if self.use_kernel:
+                from repro.kernels.hamming import ops as hamming_ops
+                sims = hamming_ops.hamming_similarity(
+                    qsig, jnp.asarray(target_sig), self.bits,
+                    temperature=self.temperature)
+            else:
+                sims = lsh_mod.hamming_similarity(
+                    qsig, jnp.asarray(target_sig), self.bits,
+                    temperature=self.temperature)
+            return np.asarray(sims, np.float64)
+        q = np.asarray(vecs, np.float64)
+        q = q / np.maximum(np.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+        return np.exp(self.temperature * (q @ target_vecs.astype(np.float64).T))
+
     def shard_similarities(self, query_word_ids: Sequence[int]) -> np.ndarray:
         """Similarity of the query to every shard.
 
@@ -138,10 +198,37 @@ class ApproxIndex:
         if self.granularity == "doc" and (self.doc_sig is not None or
                                           self.doc_vecs is not None):
             doc_sims = self._exp_sim(self.query_vector(query_word_ids),
-                                     self.doc_sig, self.doc_vecs)
+                                     self.doc_sig, self.doc_vecs, "doc")
             return self._sum_docs_to_shards(doc_sims)
         return self._exp_sim(self.query_vector(query_word_ids),
-                             self.shard_sig, self.shard_vecs)
+                             self.shard_sig, self.shard_vecs, "shard")
+
+    def query_vectors(self, queries: Sequence[Sequence[int]]) -> np.ndarray:
+        """[B, dim] stack of query vectors (sum of word vectors each)."""
+        return np.stack([self.query_vector(q) for q in queries])
+
+    def shard_similarities_batch(
+            self, queries: Sequence[Sequence[int]]) -> np.ndarray:
+        """[B, n_shards] similarity of every query to every shard in one
+        scoring pass — the batch analogue of ``shard_similarities`` (see
+        ``_exp_sim_batch`` for how each LSH mode batches)."""
+        vecs = self.query_vectors(queries)
+        if self.granularity == "doc" and (self.doc_sig is not None or
+                                          self.doc_vecs is not None):
+            doc_sims = self._exp_sim_batch(vecs, self.doc_sig,
+                                           self.doc_vecs, "doc")
+            return self._sum_docs_to_shards_batch(doc_sims)
+        return self._exp_sim_batch(vecs, self.shard_sig,
+                                   self.shard_vecs, "shard")
+
+    def word_shard_similarities_batch(
+            self, word_ids: Sequence[int]) -> np.ndarray:
+        """[n_words, n_shards] per-word p(w|s) rows in one pass — lets a
+        batch of Boolean queries score all their distinct words with a
+        single GEMM before applying the AND->product / OR->sum algebra."""
+        ids = np.asarray(list(word_ids), np.int64)
+        return self._exp_sim_batch(self.word_vecs[ids], self.shard_sig,
+                                   self.shard_vecs, "shard")
 
     def _sum_docs_to_shards(self, doc_values: np.ndarray) -> np.ndarray:
         if self._doc_shard_ids is None:
@@ -149,6 +236,19 @@ class ApproxIndex:
         out = np.zeros(self.shard_vecs.shape[0], np.float64)
         np.add.at(out, self._doc_shard_ids, doc_values)
         return out
+
+    def _sum_docs_to_shards_batch(self, doc_values: np.ndarray) -> np.ndarray:
+        """[B, n_docs] -> [B, n_shards] row-wise scatter-add.  Per-row
+        weighted bincount: np.add.at with a 2-D fancy index is unbuffered
+        and ~100x slower, which matters in the batched doc-granular
+        scoring hot path."""
+        if self._doc_shard_ids is None:
+            raise ValueError("doc-granular scoring requires attach_corpus()")
+        n_shards = self.shard_vecs.shape[0]
+        return np.stack([
+            np.bincount(self._doc_shard_ids, weights=row,
+                        minlength=n_shards)
+            for row in doc_values])
 
     def attach_corpus(self, corpus) -> "ApproxIndex":
         """Record the doc->shard map (needed for doc-granular scoring)."""
@@ -161,17 +261,23 @@ class ApproxIndex:
 
     def word_shard_similarity(self, word_id: int) -> np.ndarray:
         """p(w|s) up to constant for a single word (Boolean retrieval)."""
-        return self._exp_sim(self.word_vecs[word_id], self.shard_sig, self.shard_vecs)
+        return self._exp_sim(self.word_vecs[word_id], self.shard_sig,
+                             self.shard_vecs, "shard")
 
     def vector_shard_similarities(self, vec: np.ndarray) -> np.ndarray:
         """exp-similarity of an arbitrary vector (e.g. a user vector) to
         every shard — used by recommendation."""
-        return self._exp_sim(vec, self.shard_sig, self.shard_vecs)
+        return self._exp_sim(vec, self.shard_sig, self.shard_vecs, "shard")
+
+    def vector_shard_similarities_batch(self, vecs: np.ndarray) -> np.ndarray:
+        """[B, dim] arbitrary vectors -> [B, n_shards] exp-similarity."""
+        return self._exp_sim_batch(vecs, self.shard_sig, self.shard_vecs,
+                                   "shard")
 
     def vector_doc_similarities(self, vec: np.ndarray) -> np.ndarray:
         if self.doc_sig is None and self.doc_vecs is None:
             raise ValueError("index was built without document vectors")
-        return self._exp_sim(vec, self.doc_sig, self.doc_vecs)
+        return self._exp_sim(vec, self.doc_sig, self.doc_vecs, "doc")
 
     # ------------------------------------------------------------------
     # persistence (atomic, manifest-checked)
@@ -186,11 +292,15 @@ class ApproxIndex:
                 bits=self.bits, n_docs=self.n_docs, avg_doc_len=self.avg_doc_len,
                 use_lsh=self.use_lsh, has_docs=self.doc_vecs is not None,
                 temperature=self.temperature, lsh_mode=self.lsh_mode,
+                use_kernel=self.use_kernel, granularity=self.granularity,
+                has_doc_shard_ids=self._doc_shard_ids is not None,
             ))),
         )
         if self.doc_vecs is not None:
             payload["doc_vecs"] = self.doc_vecs
             payload["doc_sig"] = self.doc_sig
+        if self._doc_shard_ids is not None:
+            payload["doc_shard_ids"] = np.asarray(self._doc_shard_ids, np.int64)
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
         os.close(fd)
         try:
@@ -214,6 +324,12 @@ class ApproxIndex:
             avg_doc_len=meta["avg_doc_len"], use_lsh=meta["use_lsh"],
             temperature=meta.get("temperature", 1.0),
             lsh_mode=meta.get("lsh_mode", "sym"),
+            # round-trip fidelity: a persisted doc-granular / kernel-routed
+            # index used to silently revert to shard-granular numpy scoring
+            use_kernel=meta.get("use_kernel", False),
+            granularity=meta.get("granularity", "shard"),
+            _doc_shard_ids=(z["doc_shard_ids"]
+                            if meta.get("has_doc_shard_ids") else None),
         )
 
     def nbytes(self) -> int:

@@ -1,6 +1,10 @@
-"""The paper's three query families over one index (Table I)."""
+"""The paper's three query families over one index (Table I), plus the
+batched execution engine that serves mixed batches of them end-to-end
+(one-pass scoring, per-shard postings, shared-scan scheduling)."""
 from repro.core.queries.aggregation import phrase_count_query, PhraseCountResult  # noqa: F401
 from repro.core.queries.retrieval import (  # noqa: F401
     BoolExpr, boolean_query, ranked_query, parse_boolean,
+    precision_at_k, recall,
 )
 from repro.core.queries.recommend import recommend_query, RecommendResult  # noqa: F401
+from repro.core.queries.batch import BatchQuery, QueryBatch  # noqa: F401

@@ -1,0 +1,273 @@
+"""Batched query execution engine (the serving hot path).
+
+Single-query execution (``phrase_count_query`` / ``boolean_query`` /
+``ranked_query``) pays three per-query costs that a multi-user serving
+workload should amortize:
+
+  1. **Scoring** — every query scores its vector against all shard
+     signatures alone (a GEMV per query).  ``QueryBatch`` plans the
+     whole batch with one call to ``ApproxIndex.shard_similarities_batch``
+     (one GEMM / one fused Pallas kernel launch), and Boolean queries
+     batch-score the union of their distinct words once before applying
+     the AND->product / OR->sum algebra per expression.
+  2. **Shard I/O and task overhead** — every query pps-samples and then
+     visits its shards independently, so a shard sampled by k queries
+     is dispatched k times.  The batch engine unions the per-query
+     plans and runs one *shared scan* per distinct shard
+     (``ShardTaskExecutor.map_shard_batch``), evaluating all interested
+     queries in that single visit — task count scales with the union,
+     not the sum.
+  3. **Scan work** — per-shard operators walk the lazily-built CSR
+     postings (``data/store.shard_postings``), so the second query to
+     touch a shard pays O(matching tokens), not O(shard tokens).
+
+Statistical behavior is unchanged: each query still draws its own pps
+sample from its own probability row (paper Eq 11), and the estimators
+consume exactly the per-shard values the single-query path would have
+produced — batching is purely an execution-layer rewrite, which is what
+the parity tests in tests/test_batch_engine.py pin down.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.index import ApproxIndex
+from repro.core.queries.aggregation import PhraseCountResult
+from repro.core.queries.retrieval import (
+    BoolExpr,
+    RankedResult,
+    RetrievalResult,
+    _expr_eval_docs,
+    bm25_scores_for_shard,
+)
+from repro.core.sampling import (
+    Estimate,
+    SampleResult,
+    ht_estimate,
+    pps_sample,
+    similarity_probabilities,
+    unique_shards,
+)
+from repro.data.store import (
+    ShardedCorpus,
+    count_phrase_in_shard,
+    shard_postings,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchQuery:
+    """One query in a mixed batch: an aggregation phrase count, a
+    Boolean retrieval, or a ranked (BM25 top-k) retrieval."""
+    kind: str                                    # "count" | "bool" | "ranked"
+    phrase: Optional[Tuple[int, ...]] = None     # kind == "count"
+    expr: Optional[BoolExpr] = None              # kind == "bool"
+    words: Optional[Tuple[int, ...]] = None      # kind == "ranked"
+    k: int = 10                                  # kind == "ranked"
+
+    @staticmethod
+    def count(phrase: Sequence[int]) -> "BatchQuery":
+        return BatchQuery("count", phrase=tuple(int(w) for w in phrase))
+
+    @staticmethod
+    def boolean(expr: BoolExpr) -> "BatchQuery":
+        return BatchQuery("bool", expr=expr)
+
+    @staticmethod
+    def ranked(words: Sequence[int], k: int = 10) -> "BatchQuery":
+        return BatchQuery("ranked", words=tuple(int(w) for w in words), k=k)
+
+    def word_ids(self) -> List[int]:
+        """The word ids whose vectors compose this query's scoring
+        vector (Boolean queries score per-word instead)."""
+        if self.kind == "count":
+            return list(self.phrase)
+        if self.kind == "ranked":
+            return list(self.words)
+        raise ValueError(f"no composed vector for kind {self.kind!r}")
+
+
+class QueryBatch:
+    """Plans, samples, and executes a mixed batch of queries end-to-end.
+
+    One instance wraps a (corpus, index, executor) triple and is reused
+    across batches; ``execute`` is the entry point.  Construction is
+    cheap — all state lives in the arguments.
+    """
+
+    def __init__(
+        self,
+        corpus: ShardedCorpus,
+        index: Optional[ApproxIndex],
+        *,
+        executor=None,
+        method: str = "emapprox",
+        confidence: float = 0.95,
+    ):
+        if method not in ("emapprox", "srcs"):
+            raise ValueError(f"unknown method {method!r}")
+        if method == "emapprox" and index is None:
+            raise ValueError("emapprox method requires an index")
+        self.corpus = corpus
+        self.index = index
+        self.executor = executor
+        self.method = method
+        self.confidence = confidence
+
+    # ------------------------------------------------------------------
+    # planning: one batched scoring pass -> per-query probability rows
+    # ------------------------------------------------------------------
+    def _probability_rows(
+            self, queries: Sequence[BatchQuery]) -> List[np.ndarray]:
+        n_shards = self.corpus.n_shards
+        if self.method == "srcs":
+            uniform = np.full(n_shards, 1.0 / n_shards, np.float64)
+            return [uniform] * len(queries)
+        # one batched scoring pass for all vector-composed queries ...
+        vec_pos = [i for i, q in enumerate(queries) if q.kind != "bool"]
+        rows: List[Optional[np.ndarray]] = [None] * len(queries)
+        if vec_pos:
+            sims = self.index.shard_similarities_batch(
+                [queries[i].word_ids() for i in vec_pos])
+            for row, i in zip(sims, vec_pos):
+                rows[i] = similarity_probabilities(row)
+        # ... and one for the union of Boolean query words
+        bool_pos = [i for i, q in enumerate(queries) if q.kind == "bool"]
+        if bool_pos:
+            words = sorted({w for i in bool_pos
+                            for w in queries[i].expr.words()})
+            word_rows = dict(zip(
+                words, self.index.word_shard_similarities_batch(words)))
+
+            def algebra(e: BoolExpr) -> np.ndarray:
+                if e.op == "word":
+                    return word_rows[e.word]
+                l, r = algebra(e.left), algebra(e.right)
+                return l * r if e.op == "and" else l + r
+
+            for i in bool_pos:
+                rows[i] = similarity_probabilities(algebra(queries[i].expr))
+        return rows
+
+    # ------------------------------------------------------------------
+    # per-query shard tasks
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _shard_fn(q: BatchQuery, doc_freq: np.ndarray, n_docs: int,
+                  avg_len: float) -> Callable[[Any], Any]:
+        if q.kind == "count":
+            if len(q.phrase) == 1:
+                w = q.phrase[0]
+                return lambda shard: shard_postings(shard).word_count(w)
+            return lambda shard: count_phrase_in_shard(shard, q.phrase)
+        if q.kind == "bool":
+            return lambda shard: shard.doc_ids[_expr_eval_docs(q.expr, shard)]
+        if q.kind == "ranked":
+            return lambda shard: (shard.doc_ids, bm25_scores_for_shard(
+                shard, q.words, doc_freq, n_docs, avg_len))
+        raise ValueError(f"unknown query kind {q.kind!r}")
+
+    # ------------------------------------------------------------------
+    # execution
+    # ------------------------------------------------------------------
+    def execute(
+        self,
+        queries: Sequence[BatchQuery],
+        rate: float,
+        rng: Optional[np.random.Generator] = None,
+    ) -> List[Any]:
+        """Run the batch; returns one result per query, in order:
+        ``PhraseCountResult`` / ``RetrievalResult`` / ``RankedResult``
+        (the same types the single-query entry points return).
+
+        ``elapsed_s`` on every result is the wall time of the *whole*
+        batch — under shared scans per-query attribution is not well
+        defined; divide by ``len(queries)`` for amortized latency.
+
+        Sampling draws happen in query order from ``rng``, so a batch
+        reproduces the exact sample sequence of a single-query loop
+        over the same queries with the same generator.
+        """
+        rng = rng or np.random.default_rng(0)
+        t0 = time.perf_counter()
+        n_shards = self.corpus.n_shards
+        precise = rate >= 1.0
+
+        if precise:
+            all_ids = np.arange(n_shards, dtype=np.int64)
+            uniform = np.full(n_shards, 1.0 / n_shards, np.float64)
+            samples = [SampleResult(all_ids, uniform, 1.0)] * len(queries)
+            plan = [all_ids] * len(queries)
+        else:
+            rows = self._probability_rows(queries)
+            samples = [pps_sample(row, rate, rng) for row in rows]
+            plan = [unique_shards(s) for s in samples]
+
+        if self.index is not None:
+            doc_freq = self.index.doc_freq
+            n_docs, avg_len = self.index.n_docs, self.index.avg_doc_len
+        else:
+            doc_freq = np.ones(self.corpus.vocab_size, np.int64)
+            n_docs = self.corpus.n_docs
+            avg_len = self.corpus.n_tokens / max(n_docs, 1)
+        fns = [self._shard_fn(q, doc_freq, n_docs, avg_len) for q in queries]
+
+        if self.executor is not None:
+            per_query = self.executor.map_shard_batch(self.corpus, plan, fns)
+        else:
+            per_query = self._inline_shared_scan(plan, fns)
+
+        elapsed = time.perf_counter() - t0
+        return [self._reduce(q, samples[i], plan[i], per_query[i], elapsed,
+                             precise)
+                for i, q in enumerate(queries)]
+
+    def _inline_shared_scan(
+        self,
+        plan: Sequence[np.ndarray],
+        fns: Sequence[Callable[[Any], Any]],
+    ) -> List[Dict[int, Any]]:
+        """Executor-less fallback: same union-and-visit-once schedule,
+        run sequentially in-process."""
+        from repro.runtime.executor import invert_plan
+        queries_of = invert_plan(plan)
+        out: List[Dict[int, Any]] = [{} for _ in plan]
+        for sid in sorted(queries_of):
+            shard = self.corpus.shards[sid]
+            for qi in queries_of[sid]:
+                out[qi][sid] = fns[qi](shard)
+        return out
+
+    def _reduce(self, q: BatchQuery, sample: SampleResult,
+                distinct: np.ndarray, by_shard: Dict[int, Any],
+                elapsed: float, precise: bool) -> Any:
+        n_shards = self.corpus.n_shards
+        if q.kind == "count":
+            if precise:
+                total = float(sum(by_shard.values()))
+                est = Estimate(total, 0.0, self.confidence, n_shards)
+            else:
+                local = np.asarray([by_shard[int(s)]
+                                    for s in sample.shard_ids], np.float64)
+                est = ht_estimate(local, sample, self.confidence)
+            return PhraseCountResult(est, sample, len(distinct), n_shards,
+                                     elapsed)
+        if q.kind == "bool":
+            hits = [by_shard[int(s)] for s in distinct]
+            doc_ids = (np.concatenate(hits) if hits
+                       else np.zeros(0, np.int64))
+            return RetrievalResult(np.unique(doc_ids), sample, len(distinct),
+                                   n_shards, elapsed)
+        parts = [by_shard[int(s)] for s in distinct]
+        if parts:
+            ids = np.concatenate([p[0] for p in parts])
+            sc = np.concatenate([p[1] for p in parts])
+        else:
+            ids, sc = np.zeros(0, np.int64), np.zeros(0, np.float64)
+        order = np.argsort(-sc, kind="stable")[:q.k]
+        return RankedResult(ids[order], sc[order], sample, len(distinct),
+                            n_shards, elapsed)

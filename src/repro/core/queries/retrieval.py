@@ -113,13 +113,30 @@ def _expr_shard_similarity(expr: BoolExpr, index: ApproxIndex) -> np.ndarray:
 
 
 def _expr_eval_docs(expr: BoolExpr, shard: DocShard) -> np.ndarray:
-    """Boolean [n_docs] mask of documents in ``shard`` satisfying expr."""
+    """Boolean [n_docs] mask of documents in ``shard`` satisfying expr.
+
+    Word leaves walk the shard's CSR postings — O(docs containing the
+    word) — instead of rescanning the flat token array per word; see
+    ``_expr_eval_docs_scan`` for the parity reference."""
+    if expr.op == "word":
+        from repro.data.store import shard_postings
+        mask = np.zeros(shard.n_docs, bool)
+        mask[shard_postings(shard).lookup(expr.word)[0]] = True
+        return mask
+    l = _expr_eval_docs(expr.left, shard)
+    r = _expr_eval_docs(expr.right, shard)
+    return (l & r) if expr.op == "and" else (l | r)
+
+
+def _expr_eval_docs_scan(expr: BoolExpr, shard: DocShard) -> np.ndarray:
+    """Flat-scan reference for ``_expr_eval_docs`` (O(shard tokens) per
+    word leaf) — kept for parity tests and one-shot evaluation."""
     if expr.op == "word":
         from repro.data.store import segment_sum_by_offsets
         hit = (shard.tokens == np.int32(expr.word)).astype(np.int64)
         return segment_sum_by_offsets(hit, shard.offsets) > 0
-    l = _expr_eval_docs(expr.left, shard)
-    r = _expr_eval_docs(expr.right, shard)
+    l = _expr_eval_docs_scan(expr.left, shard)
+    r = _expr_eval_docs_scan(expr.right, shard)
     return (l & r) if expr.op == "and" else (l | r)
 
 
@@ -186,7 +203,41 @@ def bm25_scores_for_shard(
     k1: float = 1.2,
     b: float = 0.75,
 ) -> np.ndarray:
-    """BM25 (Robertson) over every document in the shard; [n_docs]."""
+    """BM25 (Robertson) over every document in the shard; [n_docs].
+
+    Walks the shard's CSR postings of the query words, touching only
+    documents that actually contain them (documents with tf=0
+    contribute 0 to the sum, exactly as in the dense formula); see
+    ``bm25_scores_for_shard_scan`` for the flat-scan parity reference.
+    """
+    from repro.data.store import shard_postings
+    lens = np.diff(shard.offsets).astype(np.float64)
+    scores = np.zeros(shard.n_docs, np.float64)
+    norm = k1 * (1.0 - b + b * lens / max(avg_doc_len, 1e-9))
+    post = shard_postings(shard)
+    for w in query_words:
+        docs, tf = post.lookup(w)
+        if docs.size == 0:
+            continue
+        tf = tf.astype(np.float64)
+        df = float(doc_freq[w])
+        idf = np.log(1.0 + (n_docs - df + 0.5) / (df + 0.5))
+        scores[docs] += idf * tf * (k1 + 1.0) / np.maximum(
+            tf + norm[docs], 1e-9)
+    return scores
+
+
+def bm25_scores_for_shard_scan(
+    shard: DocShard,
+    query_words: Sequence[int],
+    doc_freq: np.ndarray,
+    n_docs: int,
+    avg_doc_len: float,
+    k1: float = 1.2,
+    b: float = 0.75,
+) -> np.ndarray:
+    """Flat-scan reference for ``bm25_scores_for_shard``: one pass over
+    the whole token array per query word."""
     lens = np.diff(shard.offsets).astype(np.float64)
     scores = np.zeros(shard.n_docs, np.float64)
     from repro.data.store import segment_sum_by_offsets

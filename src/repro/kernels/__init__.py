@@ -3,6 +3,10 @@
 
   hamming/  - packed XOR+popcount LSH similarity (paper Sec. III-B,
               the "extremely cheap" query-time similarity)
+  asym/     - fused batched asymmetric scoring (projection +
+              sign-matmul + exp-cosine) for the batched query engine
+              (core/queries/batch.py): one kernel launch scores a
+              [B, dim] query block against all packed signatures
   negsamp/  - fused PV-DBOW negative-sampling training step (the
               offline T-Time cost in paper Table II)
   kmeans/   - spherical k-means assignment (paper Sec. IV-D allocation)

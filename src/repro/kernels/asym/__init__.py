@@ -1,0 +1,16 @@
+"""Fused batched asymmetric LSH scoring kernel.
+
+The batched query engine's hot path: score a block of B query vectors
+against M packed signatures in one shot.  The kernel fuses the three
+stages that the numpy path runs separately —
+
+    proj  = Q_hat @ planes.T          (query-side projection, MXU)
+    cos   ~ proj @ signs.T * scale    (sign-matmul against unpacked
+                                       stored bits, MXU)
+    out   = exp(beta * clip(cos))     (exp-cosine map, VPU)
+
+— so the [M, bits] sign matrix is unpacked tile-by-tile in VMEM and
+never materialized in HBM.  See kernels/hamming for the symmetric
+(two-sided Hamming) sibling.
+"""
+from repro.kernels.asym.ops import asym_exp_similarity  # noqa: F401

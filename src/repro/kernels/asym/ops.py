@@ -1,0 +1,37 @@
+"""Public jit'd wrapper for the fused batched asym kernel.
+
+On CPU (this container) the Pallas body runs in interpret mode; on TPU
+the same BlockSpecs compile to Mosaic.  Query rows are normalized and
+both row axes padded to tile multiples here so the kernel never sees
+ragged blocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.asym import kernel as _k
+from repro.kernels.common import on_tpu, pad_rows
+
+
+def asym_exp_similarity(query_vecs: jax.Array, db_packed: jax.Array,
+                        planes: jax.Array, bits: int,
+                        *, tb: int = 8, tm: int = 256,
+                        temperature: float = 1.0) -> jax.Array:
+    """[B, dim] queries x [M, W] packed signatures -> [B, M] float32
+    exp(temperature * asym-cos).  Queries may have any norm; rows are
+    unit-normalized before projection (padding rows stay zero — their
+    projections are zero, and the padded outputs are sliced away)."""
+    q = jnp.asarray(query_vecs, jnp.float32)
+    if q.ndim == 1:
+        q = q[None, :]
+    b, m = q.shape[0], db_packed.shape[0]
+    tb = min(tb, max(1, b))
+    tm = min(tm, max(1, m))
+    q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+    q = pad_rows(q, tb)
+    db = pad_rows(jnp.asarray(db_packed, jnp.uint32), tm)
+    out = _k.asym_similarity_kernel(
+        q, jnp.asarray(planes, jnp.float32), db, bits,
+        tb=tb, tm=tm, interpret=not on_tpu(), temperature=temperature)
+    return out[:b, :m]

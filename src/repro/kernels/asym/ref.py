@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused batched asym kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lsh as lsh_mod
+
+
+def asym_exp_similarity_ref(
+    query_vecs: jax.Array,   # [B, dim] real-valued, any norm
+    db_packed: jax.Array,    # [M, W] uint32
+    planes: jax.Array,       # [bits, dim]
+    bits: int,
+    temperature: float = 1.0,
+) -> jax.Array:
+    """[B, M] exp(beta * asym-cos) via the unbatched reference path."""
+    q = query_vecs / jnp.maximum(
+        jnp.linalg.norm(query_vecs, axis=-1, keepdims=True), 1e-9)
+    proj = q @ planes.T                                       # [B, bits]
+    signs = 2.0 * lsh_mod.unpack_bits(db_packed, bits).astype(jnp.float32) - 1.0
+    scale = 1.0 / (bits * jnp.sqrt(2.0 / jnp.pi))
+    cos = jnp.clip(proj @ signs.T * scale, -1.0, 1.0)
+    return jnp.exp(temperature * cos)

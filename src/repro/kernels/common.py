@@ -1,0 +1,24 @@
+"""Shared helpers for the kernel ops wrappers.
+
+Every kernel's public wrapper needs the same two things: backend
+detection (Pallas bodies run in interpret mode off-TPU) and row
+padding to tile multiples so kernels never see ragged blocks.  One
+copy here keeps the wrappers in sync.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pad_rows(x: jax.Array, multiple: int) -> jax.Array:
+    """Zero-pad axis 0 of ``x`` up to a multiple of ``multiple``."""
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x

@@ -9,19 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import on_tpu, pad_rows
 from repro.kernels.hamming import kernel as _k
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _pad_rows(x: jax.Array, multiple: int) -> jax.Array:
-    n = x.shape[0]
-    pad = (-n) % multiple
-    if pad:
-        x = jnp.pad(x, ((0, pad), (0, 0)))
-    return x
 
 
 def hamming_distance(q_packed: jax.Array, db_packed: jax.Array,
@@ -29,10 +18,10 @@ def hamming_distance(q_packed: jax.Array, db_packed: jax.Array,
     n, m = q_packed.shape[0], db_packed.shape[0]
     tn = min(tn, max(1, n))
     tm = min(tm, max(1, m))
-    q = _pad_rows(jnp.asarray(q_packed, jnp.uint32), tn)
-    db = _pad_rows(jnp.asarray(db_packed, jnp.uint32), tm)
+    q = pad_rows(jnp.asarray(q_packed, jnp.uint32), tn)
+    db = pad_rows(jnp.asarray(db_packed, jnp.uint32), tm)
     out = _k.hamming_distance_kernel(q, db, tn=tn, tm=tm,
-                                     interpret=not _on_tpu())
+                                     interpret=not on_tpu())
     return out[:n, :m]
 
 
@@ -42,9 +31,9 @@ def hamming_similarity(q_packed: jax.Array, db_packed: jax.Array, bits: int,
     n, m = q_packed.shape[0], db_packed.shape[0]
     tn = min(tn, max(1, n))
     tm = min(tm, max(1, m))
-    q = _pad_rows(jnp.asarray(q_packed, jnp.uint32), tn)
-    db = _pad_rows(jnp.asarray(db_packed, jnp.uint32), tm)
+    q = pad_rows(jnp.asarray(q_packed, jnp.uint32), tn)
+    db = pad_rows(jnp.asarray(db_packed, jnp.uint32), tm)
     out = _k.hamming_similarity_kernel(q, db, bits, tn=tn, tm=tm,
-                                       interpret=not _on_tpu(),
+                                       interpret=not on_tpu(),
                                        temperature=temperature)
     return out[:n, :m]

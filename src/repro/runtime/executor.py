@@ -14,12 +14,22 @@ On a TPU cluster the same policy applies at pod granularity (a pod is a
 worker; shards are its resident data) — the executor keeps that mapping
 abstract by operating on shard ids.  Failure injection for tests is via
 ``fault_hook`` which may raise on chosen shards.
+
+Shared-scan scheduling (``map_shard_batch``): a batch of queries, each
+with its own sampled shard plan, is inverted into one task per shard in
+the *union* of the plans; visiting a shard evaluates every query that
+sampled it in a single pass.  I/O and task overhead scale with the
+union size instead of the sum of per-query plan sizes, and retry /
+speculation apply to the composite shard task, so a retried shard
+re-evaluates all of its queries (same at-least-once semantics as
+``map_shards``).
 """
 from __future__ import annotations
 
+import queue
 import threading
 import time
-from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, Iterable, Optional, Sequence
 
 import numpy as np
@@ -27,6 +37,18 @@ import numpy as np
 
 class ShardTaskError(RuntimeError):
     pass
+
+
+def invert_plan(plan: Sequence[Sequence[int]]) -> Dict[int, list]:
+    """{shard_id: [query indices]} union of per-query shard plans — the
+    shared-scan schedule.  One definition serves both the executor's
+    ``map_shard_batch`` and the executor-less inline fallback in
+    ``core/queries/batch.py`` so the two schedules cannot diverge."""
+    queries_of: Dict[int, list] = {}
+    for qi, shard_ids in enumerate(plan):
+        for sid in shard_ids:
+            queries_of.setdefault(int(sid), []).append(qi)
+    return queries_of
 
 
 class ShardTaskExecutor:
@@ -37,12 +59,19 @@ class ShardTaskExecutor:
         straggler_factor: float = 3.0,
         min_completed_for_speculation: int = 4,
         fault_hook: Optional[Callable[[int, int], None]] = None,
+        min_straggler_s: float = 0.05,
     ):
         self.workers = workers
         self.max_retries = max_retries
         self.straggler_factor = straggler_factor
         self.min_completed = min_completed_for_speculation
         self.fault_hook = fault_hook  # (shard_id, attempt) -> None or raise
+        # Floor on the speculation threshold: when the median task time
+        # is below the scheduler's own tick (tasks of ~100 us at batch
+        # scale), 3x the median is noise-level and speculation would
+        # duplicate healthy tasks — a backup task is only worth
+        # launching for work at least as long as a scheduling quantum.
+        self.min_straggler_s = min_straggler_s
         self.stats: Dict[str, int] = {"retries": 0, "speculative": 0}
 
     def resize(self, workers: int) -> None:
@@ -55,62 +84,143 @@ class ShardTaskExecutor:
         shard_ids: Sequence[int],
         fn: Callable[[Any], Any],
     ) -> Dict[int, Any]:
-        """Run ``fn(shard)`` for every id; returns {shard_id: result}."""
+        """Run ``fn(shard)`` for every id; returns {shard_id: result}.
+
+        The completion loop is event-driven: every future signals a
+        queue via ``add_done_callback`` and the scheduler blocks on that
+        queue, so bookkeeping is O(1) per completion.  (The previous
+        ``wait(..., FIRST_COMPLETED)`` polling loop re-registered a
+        waiter on every still-pending future each iteration — O(tasks)
+        per completion, O(tasks^2) per job — which at shared-scan batch
+        sizes cost more than the shard work itself.)  Straggler checks
+        run on 50 ms ticks and on each completion.
+        """
         ids = [int(s) for s in shard_ids]
         results: Dict[int, Any] = {}
         attempts: Dict[int, int] = {i: 0 for i in ids}
         lock = threading.Lock()
 
-        def run_one(sid: int) -> Any:
+        # live[sid][attempt] = when that attempt actually began executing
+        # on a worker (NOT when it was submitted): with queue depth >>
+        # workers, submission age measures queue wait, and the straggler
+        # check would speculatively duplicate nearly every queued task
+        # once the median of the first few completions is small.  Keyed
+        # per attempt so a speculative duplicate cannot overwrite the
+        # original's start (which would corrupt duration samples), and
+        # failed attempts are removed so a queued retry is never
+        # mistaken for a running straggler.
+        live: Dict[int, Dict[int, float]] = {i: {} for i in ids}
+
+        def run_one(sid: int, attempt: int) -> Any:
             with lock:
-                attempts[sid] += 1
-                attempt = attempts[sid]
+                live[sid][attempt] = time.perf_counter()
             if self.fault_hook is not None:
                 self.fault_hook(sid, attempt)
             return fn(corpus.shards[sid])
 
+        completions: "queue.Queue[tuple]" = queue.Queue()
+        in_flight = 0
+        durations: list = []
+        speculated: set = set()
+
         with ThreadPoolExecutor(max_workers=self.workers) as pool:
-            future_of: Dict[Future, int] = {
-                pool.submit(run_one, sid): sid for sid in ids}
-            started = {sid: time.perf_counter() for sid in ids}
-            durations: list = []
-            speculated: set = set()
-            pending = set(future_of)
-            while pending:
-                done, pending = wait(pending, timeout=0.05,
-                                     return_when=FIRST_COMPLETED)
+
+            def submit(sid: int) -> None:
+                nonlocal in_flight
+                with lock:
+                    attempts[sid] += 1
+                    attempt = attempts[sid]
+                fut = pool.submit(run_one, sid, attempt)
+                fut.add_done_callback(
+                    lambda f, sid=sid, a=attempt: completions.put(
+                        (sid, a, f)))
+                in_flight += 1
+
+            last_check = time.perf_counter()
+
+            def check_stragglers(now: float) -> None:
+                nonlocal last_check
+                if len(durations) < self.min_completed:
+                    return
+                if now - last_check < 0.05:  # O(ids) scan, throttled
+                    return
+                last_check = now
+                median = float(np.median(durations))
+                threshold = self.straggler_factor * max(
+                    median, self.min_straggler_s)
+                for sid in ids:
+                    if sid in results or sid in speculated:
+                        continue
+                    with lock:
+                        t_run = min(live[sid].values(), default=None)
+                    if t_run is not None and now - t_run > threshold:
+                        speculated.add(sid)
+                        self.stats["speculative"] += 1
+                        submit(sid)
+
+            for sid in ids:
+                submit(sid)
+            while in_flight:
+                try:
+                    sid, attempt, fut = completions.get(timeout=0.05)
+                except queue.Empty:
+                    check_stragglers(time.perf_counter())
+                    continue
+                in_flight -= 1
                 now = time.perf_counter()
-                for fut in done:
-                    sid = future_of[fut]
-                    try:
-                        res = fut.result()
-                        if sid not in results:
-                            results[sid] = res
-                            durations.append(now - started[sid])
-                    except Exception:
-                        if attempts[sid] <= self.max_retries:
-                            self.stats["retries"] += 1
-                            nf = pool.submit(run_one, sid)
-                            future_of[nf] = sid
-                            pending.add(nf)
-                        elif sid not in results:
-                            raise ShardTaskError(
-                                f"shard {sid} failed after "
-                                f"{attempts[sid]} attempts")
-                # straggler speculation
-                if (len(durations) >= self.min_completed and pending):
-                    median = float(np.median(durations))
-                    for fut in list(pending):
-                        sid = future_of[fut]
-                        if (sid not in results and sid not in speculated and
-                                now - started[sid] >
-                                self.straggler_factor * max(median, 1e-4)):
-                            speculated.add(sid)
-                            self.stats["speculative"] += 1
-                            nf = pool.submit(run_one, sid)
-                            future_of[nf] = sid
-                            pending.add(nf)
+                try:
+                    res = fut.result()
+                    with lock:
+                        t_start = live[sid].pop(attempt, now)
+                    if sid not in results:
+                        results[sid] = res
+                        durations.append(now - t_start)
+                except Exception:
+                    with lock:
+                        live[sid].pop(attempt, None)
+                    if sid in results:
+                        pass  # a speculative duplicate failed after the
+                              # original already delivered — nothing to redo
+                    elif attempts[sid] <= self.max_retries:
+                        self.stats["retries"] += 1
+                        submit(sid)
+                    else:
+                        raise ShardTaskError(
+                            f"shard {sid} failed after "
+                            f"{attempts[sid]} attempts")
+                check_stragglers(now)
         missing = [s for s in ids if s not in results]
         if missing:
             raise ShardTaskError(f"shards never completed: {missing}")
         return results
+
+    def map_shard_batch(
+        self,
+        corpus,
+        plan: Sequence[Sequence[int]],
+        fns: Sequence[Callable[[Any], Any]],
+    ) -> "list[Dict[int, Any]]":
+        """Shared scan over a batch of queries.
+
+        ``plan[i]`` is the shard ids query ``i`` sampled and ``fns[i]``
+        its per-shard task.  Returns one ``{shard_id: result}`` dict per
+        query — exactly what ``map_shards(corpus, plan[i], fns[i])``
+        would have produced, but each shard in the union of the plans is
+        visited once, with all interested queries evaluated in that
+        single visit.  Retry and straggler speculation are inherited
+        from ``map_shards`` at composite-task granularity.
+        """
+        if len(plan) != len(fns):
+            raise ValueError(f"plan/fns length mismatch: "
+                             f"{len(plan)} != {len(fns)}")
+        queries_of = invert_plan(plan)
+
+        def shared_scan(shard):
+            return {qi: fns[qi](shard) for qi in queries_of[shard.shard_id]}
+
+        by_shard = self.map_shards(corpus, sorted(queries_of), shared_scan)
+        out: list = [{} for _ in plan]
+        for sid, per_query in by_shard.items():
+            for qi, res in per_query.items():
+                out[qi][sid] = res
+        return out

@@ -1,0 +1,54 @@
+"""Import indirection for ``hypothesis`` so the suite degrades gracefully.
+
+This container has no network access and ``hypothesis`` is not baked
+into the image, so a bare ``from hypothesis import given`` aborts the
+whole pytest collection (4 modules' worth of non-property tests were
+being lost with it).  Import ``given``/``settings``/``st`` from this
+module instead: when hypothesis is available they are the real thing;
+when it is missing, ``@given`` rewrites the test into a zero-argument
+stub that calls ``pytest.skip`` so property tests skip cleanly while
+every example-based test in the same module still runs.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: every strategy
+        constructor (``st.integers(...)``, ``st.floats(...)``, ...)
+        returns an inert placeholder — ``@given`` below never calls
+        into it."""
+
+        def __getattr__(self, name):
+            def _strategy(*args, **kwargs):
+                return None
+
+            return _strategy
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # Zero-arg replacement: pytest must not try to resolve the
+            # property arguments (x, seed, ...) as fixtures.
+            def skipper():
+                pytest.skip("hypothesis not installed")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco

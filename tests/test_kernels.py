@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.asym import ops as aops
+from repro.kernels.asym import ref as aref
 from repro.kernels.hamming import kernel as hk
 from repro.kernels.hamming import ops as hops
 from repro.kernels.hamming import ref as href
@@ -38,6 +40,42 @@ def test_hamming_similarity_matches_ref(bits, temp):
     got = hops.hamming_similarity(q, db, bits, temperature=temp)
     want = href.hamming_similarity_ref(q, db, bits) ** temp
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5)
+
+
+# ----------------------------------------------------------------------
+# asym (fused batched projection + sign-matmul + exp-cosine)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("b,m,dim,bits,temp", [
+    (1, 7, 24, 128, 1.0), (5, 300, 48, 256, 8.0), (16, 1000, 32, 64, 4.0),
+    (3, 257, 48, 128, 8.0), (9, 512, 64, 96, 2.0),
+])
+def test_asym_similarity_matches_ref(b, m, dim, bits, temp):
+    from repro.core import lsh as lsh_mod
+    rng = np.random.default_rng(b * 1000 + m)
+    q = jnp.asarray(rng.normal(size=(b, dim)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(m, dim)).astype(np.float32))
+    planes = lsh_mod.hyperplanes(lsh_mod.LSHConfig(bits=bits), dim)
+    db = lsh_mod.pack_bits(lsh_mod.signature_bits(x, planes))
+    got = aops.asym_exp_similarity(q, db, planes, bits, temperature=temp)
+    want = aref.asym_exp_similarity_ref(q, db, planes, bits, temperature=temp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5)
+
+
+def test_asym_kernel_matches_single_query_asymmetric_cosine():
+    """The fused batch kernel row-matches core asymmetric_cosine."""
+    from repro.core import lsh as lsh_mod
+    rng = np.random.default_rng(7)
+    dim, bits, temp = 48, 128, 8.0
+    q = rng.normal(size=(4, dim)).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(200, dim)).astype(np.float32))
+    planes = lsh_mod.hyperplanes(lsh_mod.LSHConfig(bits=bits), dim)
+    db = lsh_mod.pack_bits(lsh_mod.signature_bits(x, planes))
+    got = np.asarray(aops.asym_exp_similarity(
+        jnp.asarray(q), db, planes, bits, temperature=temp))
+    for i in range(q.shape[0]):
+        cos = lsh_mod.asymmetric_cosine(jnp.asarray(q[i]), db, planes, bits)
+        np.testing.assert_allclose(got[i], np.exp(temp * np.asarray(cos)),
+                                   rtol=3e-5)
 
 
 # ----------------------------------------------------------------------

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.lsh import (
     LSHConfig,
@@ -56,7 +56,11 @@ def test_cosine_preservation():
     true_cos = x @ x.T
     err = np.abs(est_cos - true_cos)
     assert err.mean() < 0.06
-    assert err.max() < 0.25
+    # max-error bound: per-pair std is at most pi*sqrt(0.25/bits) ~ 0.069
+    # at 512 bits, so the expected max over 60*59 pairs is already
+    # ~ 0.069*sqrt(2 ln 3540) ~ 0.28 — the old 0.25 bound sat below the
+    # *expected* maximum and failed for typical seeds (this one: 0.295).
+    assert err.max() < 0.35
 
 
 def test_asymmetric_beats_symmetric():

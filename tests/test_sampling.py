@@ -1,7 +1,7 @@
 """Estimator properties: unbiasedness, coverage, pps variance reduction."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.sampling import (
     ht_estimate,

@@ -1,7 +1,7 @@
 """Document store: phrase counting oracle, reallocation, boundaries."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.data.store import (
     DocShard,
