@@ -1,13 +1,16 @@
 """End-to-end driver (the paper's kind: approximate query serving).
 
 Builds the offline index once, then serves a stream of mixed queries —
-aggregation, Boolean, ranked — through the batched execution engine
-(``QueryBatch``): each batch is planned with one batched scoring pass,
-pps-sampled per query, and executed as a shared scan over the union of
-the sampled shards on the fault-tolerant executor (with injected worker
-faults surviving via retries).  Accuracy is reported against precise
-answers computed with a rate-1.0 batch — itself a single shared scan
-over all shards.
+aggregation, Boolean, ranked — through the *warm adaptive serving
+runtime*: queries arrive one by one at a ``BatchWindow`` frontend,
+which closes batches by deadline (low traffic keeps latency) or size
+(high traffic gets full shared-scan amortization); each closed window
+runs through the batched execution engine (``QueryBatch``) — one
+batched scoring pass, per-query pps sampling, one shared scan over the
+union of sampled shards — on a fault-tolerant executor whose thread
+pool stays warm across batches (with injected worker faults surviving
+via retries).  Accuracy is reported against precise answers computed
+with a rate-1.0 batch — itself a single shared scan over all shards.
 
     PYTHONPATH=src python examples/serve_queries.py [--queries 48]
 """
@@ -26,7 +29,12 @@ def main():
     ap.add_argument("--queries", type=int, default=48)
     ap.add_argument("--rate", type=float, default=0.25)
     ap.add_argument("--batch", type=int, default=12,
-                    help="queries per served batch")
+                    help="max queries per served window")
+    ap.add_argument("--window-ms", type=float, default=2.0,
+                    help="batch window deadline (ms)")
+    ap.add_argument("--arrival-us", type=float, default=100.0,
+                    help="mean inter-arrival gap of the synthetic "
+                         "query stream (microseconds)")
     ap.add_argument("--workers", type=int, default=2)
     args = ap.parse_args()
 
@@ -38,7 +46,7 @@ def main():
                                     precision_at_k, recall)
     from repro.data.corpus import SyntheticCorpusConfig, generate_text_corpus
     from repro.data.store import ShardedCorpus
-    from repro.runtime.executor import ShardTaskExecutor
+    from repro.runtime import BatchWindow, ShardTaskExecutor
 
     print("== offline index build ==")
     ccfg = SyntheticCorpusConfig(n_docs=2400, vocab_size=4096, n_topics=16)
@@ -63,7 +71,8 @@ def main():
             raise RuntimeError("injected transient fault")
 
     executor = ShardTaskExecutor(workers=args.workers, max_retries=2,
-                                 fault_hook=fault_hook)
+                                 fault_hook=fault_hook,
+                                 adaptive_workers=True)
     engine = QueryBatch(corpus, index, executor=executor)
 
     rng = np.random.default_rng(0)
@@ -88,41 +97,69 @@ def main():
     precise = engine.execute(queries, 1.0)
 
     print(f"== serving {args.queries} mixed queries at rate {args.rate} "
-          f"in batches of {args.batch} ==")
+          f"through a {args.window_ms:.1f} ms / {args.batch}-query "
+          f"batch window ==")
+    # the window's rng is drawn from by the dispatcher thread while the
+    # main thread draws arrival gaps — separate generators keep both
+    # streams deterministic (numpy Generators are not thread-safe)
+    window = BatchWindow(engine, args.rate, max_batch=args.batch,
+                         max_delay_s=args.window_ms / 1e3,
+                         rng=np.random.default_rng(1))
+    arrival_rng = np.random.default_rng(2)
+    done_at = {}
+    t_submit = {}
+
+    def on_done(i):
+        def cb(_fut):
+            done_at[i] = time.perf_counter()
+        return cb
+
+    t_serve = time.perf_counter()
+    futs = []
+    for i, q in enumerate(queries):
+        t_submit[i] = time.perf_counter()
+        fut = window.submit(q)
+        fut.add_done_callback(on_done(i))
+        futs.append(fut)
+        if args.arrival_us > 0:
+            time.sleep(arrival_rng.exponential(args.arrival_us) / 1e6)
+    results = [f.result() for f in futs]
+    elapsed = time.perf_counter() - t_serve
+    window.close()
+
     lat = {"agg": [], "bool": [], "ranked": []}
     acc = {"agg": [], "bool": [], "ranked": []}
     kind_of = {"count": "agg", "bool": "bool", "ranked": "ranked"}
-    served = 0
-    t_serve = time.perf_counter()
-    for lo in range(0, len(queries), args.batch):
-        chunk = queries[lo:lo + args.batch]
-        t0 = time.perf_counter()
-        results = engine.execute(chunk, args.rate, rng=rng)
-        amortized = (time.perf_counter() - t0) / len(chunk)
-        served += len(chunk)
-        for q, r, ref in zip(chunk, results, precise[lo:lo + args.batch]):
-            k = kind_of[q.kind]
-            lat[k].append(amortized)
-            if q.kind == "count":
-                if ref.estimate.value:
-                    acc[k].append(abs(r.estimate.value - ref.estimate.value)
-                                  / ref.estimate.value)
-            elif q.kind == "bool":
-                acc[k].append(recall(r.doc_ids, ref.doc_ids))
-            else:
-                acc[k].append(precision_at_k(r.doc_ids, ref.doc_ids, 10))
-    elapsed = time.perf_counter() - t_serve
+    for i, (q, r, ref) in enumerate(zip(queries, results, precise)):
+        k = kind_of[q.kind]
+        lat[k].append(done_at[i] - t_submit[i])
+        if q.kind == "count":
+            if ref.estimate.value:
+                acc[k].append(abs(r.estimate.value - ref.estimate.value)
+                              / ref.estimate.value)
+        elif q.kind == "bool":
+            acc[k].append(recall(r.doc_ids, ref.doc_ids))
+        else:
+            acc[k].append(precision_at_k(r.doc_ids, ref.doc_ids, 10))
 
-    print(f"   throughput: {served/elapsed:8.1f} queries/sec "
-          f"({served} queries in {elapsed:.2f}s)")
+    ws = window.stats
+    print(f"   throughput: {len(queries)/elapsed:8.1f} queries/sec "
+          f"({len(queries)} queries in {elapsed:.2f}s)")
+    print(f"   windows: {ws['batches']} "
+          f"(by size {ws['closed_by_size']}, "
+          f"by deadline {ws['closed_by_deadline']}, "
+          f"by flush {ws['closed_by_flush']})")
     print(f"   injected faults survived: {faults['injected']} "
-          f"(executor retries: {executor.stats['retries']})")
+          f"(executor retries: {executor.stats['retries']}; warm pool "
+          f"rebuilds: {executor.stats['pool_rebuilds']} across "
+          f"{executor.stats['jobs']} jobs)")
     for kind, metric in (("agg", "mean rel err"), ("bool", "mean recall"),
                          ("ranked", "mean P@10")):
         if lat[kind]:
-            print(f"   {kind:7s}: p50 amortized latency "
+            print(f"   {kind:7s}: p50 sojourn latency "
                   f"{np.percentile(lat[kind], 50)*1e3:7.2f} ms | "
                   f"{metric} {np.mean(acc[kind]):.3f}")
+    executor.close()
 
 
 if __name__ == "__main__":

@@ -22,6 +22,17 @@ Single-query scoring stays on the latency-tuned numpy path; batched
 scoring trades a little latency for throughput and is what
 ``core/queries/batch.QueryBatch`` uses.
 
+Fused reductions: for doc-granular scoring the planner only consumes
+per-shard sums (M = n_docs >> n_shards), so ``shard_similarities_batch
+(..., fused=True)`` routes kernel-backed indices through the fused
+segment-sum kernels — doc signatures are fed shard-sorted and each tile
+reduces into a narrow band of shard slots in VMEM, so the [B, n_docs]
+intermediate never reaches HBM.  ``topk_doc_similarities_batch`` is the
+ranked analogue (fused in-kernel top-k).  The unfused ``_exp_sim_batch``
++ ``_sum_docs_to_shards_batch`` route is kept as the parity reference
+(and as the non-kernel hot path, vectorized via one shard-sorted
+``np.add.reduceat``).
+
 The index is deliberately tiny relative to the corpus (paper Table II:
 125 MB for 62 GB) — LSH compresses each 100-dim fp32 vector 64x.  Here
 the exact compression is dim*4*8/bits bits per item.
@@ -31,7 +42,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import tempfile
 from typing import Optional, Sequence
 
 import jax
@@ -41,7 +51,7 @@ import numpy as np
 from repro.core import lsh as lsh_mod
 from repro.core import pv_dbow as pv
 from repro.core.sampling import similarity_probabilities
-from repro.data.store import ShardedCorpus
+from repro.data.store import ShardedCorpus, atomic_savez
 
 
 @dataclasses.dataclass
@@ -208,18 +218,103 @@ class ApproxIndex:
         return np.stack([self.query_vector(q) for q in queries])
 
     def shard_similarities_batch(
-            self, queries: Sequence[Sequence[int]]) -> np.ndarray:
+            self, queries: Sequence[Sequence[int]], *,
+            fused: bool = True) -> np.ndarray:
         """[B, n_shards] similarity of every query to every shard in one
         scoring pass — the batch analogue of ``shard_similarities`` (see
-        ``_exp_sim_batch`` for how each LSH mode batches)."""
-        vecs = self.query_vectors(queries)
-        if self.granularity == "doc" and (self.doc_sig is not None or
-                                          self.doc_vecs is not None):
-            doc_sims = self._exp_sim_batch(vecs, self.doc_sig,
-                                           self.doc_vecs, "doc")
-            return self._sum_docs_to_shards_batch(doc_sims)
-        return self._exp_sim_batch(vecs, self.shard_sig,
-                                   self.shard_vecs, "shard")
+        ``_exp_sim_batch`` for how each LSH mode batches).
+
+        ``fused=True`` (default) routes kernel-backed doc-granular
+        scoring through the fused segment-sum kernels, which reduce the
+        [B, n_docs] similarity tile directly into [B, n_shards] in VMEM
+        — the doc-wide intermediate never reaches HBM.  ``fused=False``
+        keeps the unfused ``_exp_sim_batch`` + numpy reduce route (the
+        parity reference the fused tests pin against)."""
+        return self._shard_sims_from_vectors(self.query_vectors(queries),
+                                             fused=fused)
+
+    def _shard_sims_from_vectors(self, vecs: np.ndarray, *,
+                                 fused: bool = True) -> np.ndarray:
+        doc_granular = self.granularity == "doc" and (
+            self.doc_sig is not None or self.doc_vecs is not None)
+        if not doc_granular:
+            return self._exp_sim_batch(vecs, self.shard_sig,
+                                       self.shard_vecs, "shard")
+        if (fused and self.use_lsh and self.use_kernel
+                and self.doc_sig is not None
+                and self._doc_shard_ids is not None):
+            return self._fused_doc_shard_sims_batch(vecs)
+        doc_sims = self._exp_sim_batch(vecs, self.doc_sig,
+                                       self.doc_vecs, "doc")
+        return self._sum_docs_to_shards_batch(doc_sims)
+
+    def _fused_device_arrays(self) -> dict:
+        """Device-resident operands for the fused kernels, uploaded once
+        and cached: re-running ``jnp.asarray`` on the [n_docs, W] doc
+        signature database per batch would push the whole index
+        host->device every ~2 ms serving window — traffic that dwarfs
+        the [B, n_docs] intermediate the fusion saves."""
+        dev = getattr(self, "_fused_dev", None)
+        if dev is None:
+            dev = dict(planes=jnp.asarray(self.planes, jnp.float32))
+            if self.doc_sig is not None:
+                dev["doc_sig"] = jnp.asarray(self.doc_sig)
+            if self._doc_shard_ids is not None:
+                _, _, _, seg_sorted, sig_sorted = self._shard_sorted_docs()
+                dev["seg"] = jnp.asarray(seg_sorted)
+                dev["sig"] = jnp.asarray(sig_sorted)
+            object.__setattr__(self, "_fused_dev", dev)
+        return dev
+
+    def _fused_doc_shard_sims_batch(self, vecs: np.ndarray) -> np.ndarray:
+        """[B, n_shards] via the fused in-kernel segment reduction: doc
+        signatures are fed shard-sorted so each kernel tile reduces into
+        a narrow band of shard slots (kernels/asym, kernels/hamming)."""
+        vecs = np.atleast_2d(np.asarray(vecs))
+        dev = self._fused_device_arrays()
+        n_shards = self.shard_vecs.shape[0]
+        if self.lsh_mode == "asym":
+            from repro.kernels.asym import ops as asym_ops
+            out = asym_ops.asym_exp_segment_sum(
+                jnp.asarray(vecs, jnp.float32), dev["sig"], dev["planes"],
+                self.bits, dev["seg"], n_shards,
+                temperature=self.temperature)
+        else:
+            from repro.kernels.hamming import ops as hamming_ops
+            qsig = lsh_mod.pack_bits(lsh_mod.signature_bits(
+                jnp.asarray(vecs, jnp.float32), dev["planes"]))
+            out = hamming_ops.hamming_segment_similarity(
+                qsig, dev["sig"], self.bits, dev["seg"], n_shards,
+                temperature=self.temperature)
+        return np.asarray(out, np.float64)
+
+    def topk_doc_similarities_batch(
+            self, queries: Sequence[Sequence[int]], k: int = 10, *,
+            fused: bool = True) -> "tuple[np.ndarray, np.ndarray]":
+        """Ranked retrieval over *documents*: ([B, k] doc indices,
+        [B, k] exp-similarities), rows sorted descending.
+
+        With ``fused=True`` on a kernel-backed asym index the top-k
+        reduction runs inside the Pallas kernel (per-tile candidates
+        only leave VMEM); otherwise the [B, n_docs] matrix is scored
+        unfused and reduced with an argsort — the parity reference."""
+        if self.doc_sig is None and self.doc_vecs is None:
+            raise ValueError("index was built without document vectors")
+        vecs = np.atleast_2d(self.query_vectors(queries))
+        if (fused and self.use_lsh and self.use_kernel
+                and self.lsh_mode == "asym" and self.doc_sig is not None):
+            from repro.kernels.asym import ops as asym_ops
+            dev = self._fused_device_arrays()
+            idx, vals = asym_ops.asym_exp_topk(
+                jnp.asarray(vecs, jnp.float32), dev["doc_sig"],
+                dev["planes"], self.bits, k,
+                temperature=self.temperature)
+            return (np.asarray(idx, np.int64),
+                    np.asarray(vals, np.float64))
+        sims = self._exp_sim_batch(vecs, self.doc_sig, self.doc_vecs, "doc")
+        k = min(int(k), sims.shape[1])
+        idx = np.argsort(-sims, axis=1, kind="stable")[:, :k]
+        return idx.astype(np.int64), np.take_along_axis(sims, idx, axis=1)
 
     def word_shard_similarities_batch(
             self, word_ids: Sequence[int]) -> np.ndarray:
@@ -237,22 +332,64 @@ class ApproxIndex:
         np.add.at(out, self._doc_shard_ids, doc_values)
         return out
 
-    def _sum_docs_to_shards_batch(self, doc_values: np.ndarray) -> np.ndarray:
-        """[B, n_docs] -> [B, n_shards] row-wise scatter-add.  Per-row
-        weighted bincount: np.add.at with a 2-D fancy index is unbuffered
-        and ~100x slower, which matters in the batched doc-granular
-        scoring hot path."""
+    def _shard_sorted_docs(self):
+        """Cached shard-sort structures for doc→shard reductions:
+        (order, starts, counts, seg_sorted, sig_sorted) where ``order``
+        permutes docs into shard-contiguous position, ``starts``/
+        ``counts`` delimit each shard's segment in that order,
+        ``seg_sorted`` is the int32 shard slot per sorted doc, and
+        ``sig_sorted`` the doc signatures in sorted order (None when
+        the index carries no doc signatures)."""
         if self._doc_shard_ids is None:
             raise ValueError("doc-granular scoring requires attach_corpus()")
-        n_shards = self.shard_vecs.shape[0]
-        return np.stack([
-            np.bincount(self._doc_shard_ids, weights=row,
-                        minlength=n_shards)
-            for row in doc_values])
+        cache = getattr(self, "_shard_sort", None)
+        if cache is None:
+            ids = np.asarray(self._doc_shard_ids, np.int64)
+            n_shards = self.shard_vecs.shape[0]
+            order = np.argsort(ids, kind="stable")
+            counts = np.bincount(ids, minlength=n_shards)
+            starts = np.zeros(n_shards, np.int64)
+            np.cumsum(counts[:-1], out=starts[1:])
+            seg_sorted = ids[order].astype(np.int32)
+            sig_sorted = (self.doc_sig[order]
+                          if self.doc_sig is not None else None)
+            cache = (order, starts, counts, seg_sorted, sig_sorted)
+            object.__setattr__(self, "_shard_sort", cache)
+        return cache
+
+    def _sum_docs_to_shards_batch(self, doc_values: np.ndarray) -> np.ndarray:
+        """[B, n_docs] -> [B, n_shards] row-wise scatter-add, vectorized
+        as one ``np.add.reduceat`` over shard-sorted doc order — the
+        non-kernel doc-granular hot path.  (The previous per-row
+        ``np.bincount`` loop re-walked the doc→shard map B times;
+        ``np.add.at`` with a 2-D fancy index is unbuffered and ~100x
+        slower still.)  Empty shards need the same care as
+        ``data/store.segment_sum_by_offsets``: reduceat mis-handles
+        empty segments, so their slots are masked to zero."""
+        order, starts, counts, _, _ = self._shard_sorted_docs()
+        doc_values = np.atleast_2d(doc_values)
+        n_docs = doc_values.shape[1]
+        out = np.zeros((doc_values.shape[0], counts.shape[0]), np.float64)
+        nonempty = counts > 0
+        if n_docs == 0 or doc_values.shape[0] == 0 or not nonempty.any():
+            return out
+        # reduceat only at non-empty segment starts: those are strictly
+        # increasing and in-bounds, so every slice is a real segment.
+        # (Clamping empty starts into range instead would fold the last
+        # docs of the preceding shard into the wrong slice whenever a
+        # trailing shard is empty.)
+        vals = np.ascontiguousarray(doc_values[:, order])
+        out[:, nonempty] = np.add.reduceat(vals, starts[nonempty], axis=1)
+        return out
 
     def attach_corpus(self, corpus) -> "ApproxIndex":
-        """Record the doc->shard map (needed for doc-granular scoring)."""
+        """Record the doc->shard map (needed for doc-granular scoring).
+        Drops the shard-sort and device-array caches — both are derived
+        from the map."""
         self._doc_shard_ids = corpus.doc_shard_map()
+        for cached in ("_shard_sort", "_fused_dev"):
+            if hasattr(self, cached):
+                object.__delattr__(self, cached)
         return self
 
     def shard_probabilities(self, query_word_ids: Sequence[int]) -> np.ndarray:
@@ -301,15 +438,7 @@ class ApproxIndex:
             payload["doc_sig"] = self.doc_sig
         if self._doc_shard_ids is not None:
             payload["doc_shard_ids"] = np.asarray(self._doc_shard_ids, np.int64)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
-        os.close(fd)
-        try:
-            np.savez_compressed(tmp, **payload)
-            os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
-        finally:
-            for leftover in (tmp, tmp + ".npz"):
-                if os.path.exists(leftover):
-                    os.unlink(leftover)
+        atomic_savez(path, **payload)
 
     @staticmethod
     def load(path: str) -> "ApproxIndex":

@@ -7,9 +7,11 @@ workload should amortize:
   1. **Scoring** — every query scores its vector against all shard
      signatures alone (a GEMV per query).  ``QueryBatch`` plans the
      whole batch with one call to ``ApproxIndex.shard_similarities_batch``
-     (one GEMM / one fused Pallas kernel launch), and Boolean queries
-     batch-score the union of their distinct words once before applying
-     the AND->product / OR->sum algebra per expression.
+     (one GEMM / one fused Pallas kernel launch; kernel-backed
+     doc-granular indices take the fused in-kernel segment reduction,
+     so the [B, n_docs] intermediate never reaches HBM), and Boolean
+     queries batch-score the union of their distinct words once before
+     applying the AND->product / OR->sum algebra per expression.
   2. **Shard I/O and task overhead** — every query pps-samples and then
      visits its shards independently, so a shard sampled by k queries
      is dispatched k times.  The batch engine unions the per-query
@@ -96,7 +98,10 @@ class QueryBatch:
 
     One instance wraps a (corpus, index, executor) triple and is reused
     across batches; ``execute`` is the entry point.  Construction is
-    cheap — all state lives in the arguments.
+    cheap — all state lives in the arguments.  For serving a *stream*
+    of queries, front this with ``runtime.window.BatchWindow``, which
+    forms the batches adaptively (deadline- or size-closed) and runs
+    them through ``execute`` on a warm executor pool.
     """
 
     def __init__(

@@ -19,13 +19,41 @@ trade-off: the one-time build costs one sort of the shard's tokens and
 couple of queries touching the shard; the flat-scan implementations are
 kept (``*_scan``) as parity references and for one-shot scans where
 building the cache would be wasted work.
+
+Persistence: ``ShardedCorpus.save``/``load`` round-trip the per-shard
+CSR payload *and* the postings next to it, so a cold serving process
+opens the corpus with every shard's inverted index already attached —
+no one-time rebuild on the first query to touch each shard.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import tempfile
 from typing import Iterable, Iterator, List, Sequence
 
 import numpy as np
+
+
+def atomic_savez(path: str, **payload: np.ndarray) -> None:
+    """Write a compressed npz atomically: savez into a tempfile in the
+    target directory, then ``os.replace`` over ``path`` — readers never
+    see a half-written file.  (np.savez appends ``.npz`` to suffixless
+    names, hence the existence probe.)  Shared by every on-disk artifact
+    (corpus + postings here, the index in core/index.py)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    os.close(fd)
+    try:
+        np.savez_compressed(tmp, **payload)
+        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp,
+                   path)
+    finally:
+        for leftover in (tmp, tmp + ".npz"):
+            if os.path.exists(leftover):
+                os.unlink(leftover)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,6 +191,49 @@ class ShardedCorpus:
         """Exact number of occurrences of ``phrase`` in the corpus."""
         return sum(count_phrase_in_shard(s, phrase) for s in self.shards)
 
+    # ------------------------------------------------------------------
+    # persistence (atomic; shard payload + CSR postings side by side)
+    # ------------------------------------------------------------------
+    def save(self, path: str, *, include_postings: bool = True) -> None:
+        """Write the corpus to one compressed npz.
+
+        ``include_postings=True`` (default) persists each shard's CSR
+        postings next to its token payload — building any that were not
+        built yet — so a process that ``load``s the file serves its
+        first queries without paying the one-time postings rebuild.
+        Set False to store the raw payload only (smaller file, lazy
+        rebuild on first use as before)."""
+        payload = dict(meta=np.asarray(json.dumps(dict(
+            vocab_size=self.vocab_size, n_shards=self.n_shards,
+            postings=bool(include_postings)))))
+        for i, shard in enumerate(self.shards):
+            payload[f"s{i}_tokens"] = shard.tokens
+            payload[f"s{i}_offsets"] = shard.offsets
+            payload[f"s{i}_doc_ids"] = shard.doc_ids
+            if include_postings:
+                post = shard_postings(shard)
+                payload[f"s{i}_indptr"] = post.indptr
+                payload[f"s{i}_doc_idx"] = post.doc_idx
+                payload[f"s{i}_tf"] = post.tf
+        atomic_savez(path, **payload)
+
+    @staticmethod
+    def load(path: str) -> "ShardedCorpus":
+        """Open a saved corpus; persisted postings are re-attached to
+        their shards, so ``shard_postings`` is a cache hit from the
+        first query onward (cold processes skip the rebuild)."""
+        z = np.load(path, allow_pickle=False)
+        meta = json.loads(str(z["meta"]))
+        shards: List[DocShard] = []
+        for i in range(int(meta["n_shards"])):
+            shard = DocShard(i, z[f"s{i}_tokens"], z[f"s{i}_offsets"],
+                             z[f"s{i}_doc_ids"])
+            if meta.get("postings"):
+                shard._postings = ShardPostings(
+                    z[f"s{i}_indptr"], z[f"s{i}_doc_idx"], z[f"s{i}_tf"])
+            shards.append(shard)
+        return ShardedCorpus(shards, int(meta["vocab_size"]))
+
 
 def count_phrase_in_shard(shard: DocShard, phrase: Sequence[int]) -> int:
     """Occurrences of a token n-gram within a shard, never crossing
@@ -189,18 +260,21 @@ def count_phrase_in_shard(shard: DocShard, phrase: Sequence[int]) -> int:
 
 def segment_sum_by_offsets(values: np.ndarray, offsets: np.ndarray) -> np.ndarray:
     """Per-document sums over a CSR layout.  Handles empty documents
-    anywhere (np.add.reduceat alone mis-handles empty segments and
-    raises when an empty doc sits at the end)."""
+    anywhere: np.add.reduceat alone mis-handles empty segments (and
+    raises on out-of-bounds starts), so it runs only at the starts of
+    non-empty documents — strictly increasing, in-bounds slices — and
+    the empty documents stay zero.  (Clamping empty starts into range
+    instead would split the last tokens of the preceding document into
+    the wrong slice whenever an empty doc sits at the end.)"""
     n_docs = len(offsets) - 1
-    if n_docs == 0:
-        return np.zeros(0, values.dtype)
-    total = values.shape[0]
-    starts = np.minimum(offsets[:-1], max(total - 1, 0))
-    if total == 0:
-        return np.zeros(n_docs, values.dtype)
-    seg = np.add.reduceat(values, starts)
+    out = np.zeros(n_docs, values.dtype)
+    if n_docs == 0 or values.shape[0] == 0:
+        return out
     lens = np.diff(offsets)
-    return np.where(lens > 0, seg, 0)
+    nonempty = lens > 0
+    if nonempty.any():
+        out[nonempty] = np.add.reduceat(values, offsets[:-1][nonempty])
+    return out
 
 
 def docs_matching_all(shard: DocShard, words: Sequence[int]) -> np.ndarray:

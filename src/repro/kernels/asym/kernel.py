@@ -23,6 +23,25 @@ handles a (TB x TM) tile of the (queries x items) output:
 
 HARDWARE ADAPTATION note: TM defaults to 256 lanes (multiple of the
 128-lane VPU registers); TB to 8 sublanes.  W = bits/32 is unrolled.
+
+Fused reductions (the serving hot path): for doc-granular scoring the
+[B, M] similarity matrix is only an intermediate — the planner consumes
+per-*shard* sums and ranked retrieval consumes a top-k.  Two fused
+variants keep that intermediate in VMEM:
+
+  * ``asym_segment_sum_kernel`` reduces each post-exp (TB, TM) tile
+    into a [TB, S] segment-sum block via a one-hot matmul against the
+    doc→shard-slot map (an MXU pass), accumulating across the M grid
+    axis in the output block that stays resident in VMEM.  Docs are
+    expected shard-sorted, so each TM tile's one-hot columns hit a
+    narrow band of shard slots; only [B, S] ever reaches HBM.
+  * ``asym_topk_kernel`` reduces each tile to its per-tile top-k
+    (values + global doc indices); the caller does the final top-k
+    over the [B, ceil(M/TM)*K] candidates — only those reach HBM.
+
+VMEM budget per grid step (defaults TB=8, TM=256, bits=256, dim<=128,
+S<=1024): q 4 KiB + planes 128 KiB + packed db 8 KiB + unpacked signs
+256 KiB + one-hot 1 MiB + out 32 KiB — well under the ~16 MB/core VMEM.
 """
 from __future__ import annotations
 
@@ -47,9 +66,9 @@ def _unpack_signs(db: jax.Array, bits: int) -> jax.Array:
     return 2.0 * b - 1.0
 
 
-def _asym_sim_kernel(q_ref, planes_ref, db_ref, out_ref, *, bits: int,
-                     temperature: float):
-    """One (TB, TM) tile of exp(beta * cos_asym(q, db))."""
+def _exp_sim_tile(q_ref, planes_ref, db_ref, bits: int,
+                  temperature: float) -> jax.Array:
+    """[TB, TM] exp(beta * cos_asym) tile — the shared fusion core."""
     q = q_ref[...]                 # [TB, dim] float32, unit rows
     planes = planes_ref[...]       # [bits, dim] float32
     db = db_ref[...]               # [TM, W] uint32
@@ -58,7 +77,55 @@ def _asym_sim_kernel(q_ref, planes_ref, db_ref, out_ref, *, bits: int,
     scale = 1.0 / (bits * math.sqrt(2.0 / math.pi))
     cos = jnp.dot(proj, signs.T, preferred_element_type=jnp.float32) * scale
     cos = jnp.clip(cos, -1.0, 1.0)
-    out_ref[...] = jnp.exp(temperature * cos)
+    return jnp.exp(temperature * cos)
+
+
+def _asym_sim_kernel(q_ref, planes_ref, db_ref, out_ref, *, bits: int,
+                     temperature: float):
+    """One (TB, TM) tile of exp(beta * cos_asym(q, db))."""
+    out_ref[...] = _exp_sim_tile(q_ref, planes_ref, db_ref, bits, temperature)
+
+
+def _asym_segsum_kernel(q_ref, planes_ref, db_ref, seg_ref, out_ref, *,
+                        bits: int, temperature: float):
+    """One (TB, TM) tile reduced into the resident [TB, S] output.
+
+    ``seg_ref`` holds the shard slot of each doc column (out-of-range
+    slots for padding docs).  The segment sum is a one-hot matmul: with
+    docs shard-sorted the [TM, S] one-hot matrix is a narrow diagonal
+    band, but correctness does not depend on the ordering.  The output
+    block's index map ignores the M grid axis, so it stays in VMEM and
+    accumulates across all ceil(M/TM) steps — the [B, M] intermediate
+    never reaches HBM."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tile = _exp_sim_tile(q_ref, planes_ref, db_ref, bits, temperature)
+    seg = seg_ref[0, ...]                                   # [TM] int32
+    slots = jax.lax.broadcasted_iota(
+        jnp.int32, (seg.shape[0], out_ref.shape[1]), 1)     # [TM, S]
+    onehot = (seg[:, None] == slots).astype(jnp.float32)
+    out_ref[...] += jnp.dot(tile, onehot,
+                            preferred_element_type=jnp.float32)
+
+
+def _asym_topk_kernel(q_ref, planes_ref, db_ref, vals_ref, idx_ref, *,
+                      bits: int, temperature: float, k: int, tm: int,
+                      m_total: int):
+    """Per-tile top-k: each (TB, TM) tile emits its K best values and
+    their *global* doc indices; padding columns are masked to -inf so
+    they can never enter the candidate set.  The caller runs the final
+    top-k over the [B, ceil(M/TM)*K] candidates."""
+    j = pl.program_id(1)
+    tile = _exp_sim_tile(q_ref, planes_ref, db_ref, bits, temperature)
+    col = jax.lax.broadcasted_iota(jnp.int32, tile.shape, 1) + j * tm
+    tile = jnp.where(col < m_total, tile, -jnp.inf)
+    vals, local_idx = jax.lax.top_k(tile, k)
+    vals_ref[...] = vals
+    idx_ref[...] = local_idx.astype(jnp.int32) + j * tm
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "tb", "tm", "interpret",
@@ -91,5 +158,97 @@ def asym_similarity_kernel(
         ],
         out_specs=pl.BlockSpec((tb, tm), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        interpret=interpret,
+    )(q, planes, db_packed)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n_segments", "tb", "tm",
+                                             "interpret", "temperature"))
+def asym_segment_sum_kernel(
+    q: jax.Array,            # [B, dim] float32, rows unit-normalized
+    planes: jax.Array,       # [bits, dim] float32
+    db_packed: jax.Array,    # [M, W] uint32, rows segment-sorted
+    seg_ids: jax.Array,      # [1, M] int32 doc -> segment slot
+    bits: int,
+    n_segments: int,         # S (lane-padded by the ops wrapper)
+    *,
+    tb: int = 8,
+    tm: int = 256,
+    interpret: bool = False,
+    temperature: float = 1.0,
+) -> jax.Array:
+    """[B, dim] x [M, W] -> [B, S] segment sums of exp(beta*asym-cos).
+
+    The M axis is the innermost grid dimension and the output block's
+    index map ignores it, so each [TB, S] block accumulates in VMEM
+    across the whole M sweep (the classic K-reduction matmul layout)."""
+    b, dim = q.shape
+    m, w = db_packed.shape
+    assert w * 32 >= bits, (w, bits)
+    kernel = functools.partial(_asym_segsum_kernel, bits=int(bits),
+                               temperature=float(temperature))
+    grid = (pl.cdiv(b, tb), pl.cdiv(m, tm))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((planes.shape[0], dim), lambda i, j: (0, 0)),
+            pl.BlockSpec((tm, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, tm), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tb, n_segments), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_segments), jnp.float32),
+        interpret=interpret,
+    )(q, planes, db_packed, seg_ids)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "k", "m_total", "tb",
+                                             "tm", "interpret", "temperature"))
+def asym_topk_kernel(
+    q: jax.Array,            # [B, dim] float32, rows unit-normalized
+    planes: jax.Array,       # [bits, dim] float32
+    db_packed: jax.Array,    # [M, W] uint32
+    bits: int,
+    k: int,
+    m_total: int,            # unpadded M (padding cols masked to -inf)
+    *,
+    tb: int = 8,
+    tm: int = 256,
+    interpret: bool = False,
+    temperature: float = 1.0,
+) -> "tuple[jax.Array, jax.Array]":
+    """Two-stage fused top-k: returns ([B, J*K] values, [B, J*K] int32
+    global doc indices) with J = ceil(M/TM) — per-tile candidates only;
+    the ops wrapper runs the cheap final top-k over them.
+
+    HARDWARE ADAPTATION note: K is the output block's lane width; on a
+    real TPU pick K (or pad it) to a multiple of the 128-lane registers
+    — interpret mode (this container) has no alignment constraint."""
+    b, dim = q.shape
+    m, w = db_packed.shape
+    assert w * 32 >= bits, (w, bits)
+    assert k <= tm, (k, tm)
+    kernel = functools.partial(_asym_topk_kernel, bits=int(bits),
+                               temperature=float(temperature), k=int(k),
+                               tm=int(tm), m_total=int(m_total))
+    jm = pl.cdiv(m, tm)
+    grid = (pl.cdiv(b, tb), jm)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((planes.shape[0], dim), lambda i, j: (0, 0)),
+            pl.BlockSpec((tm, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tb, k), lambda i, j: (i, j)),
+            pl.BlockSpec((tb, k), lambda i, j: (i, j)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, jm * k), jnp.float32),
+            jax.ShapeDtypeStruct((b, jm * k), jnp.int32),
+        ),
         interpret=interpret,
     )(q, planes, db_packed)

@@ -1,9 +1,11 @@
-"""Public jit'd wrapper for the fused batched asym kernel.
+"""Public jit'd wrappers for the fused batched asym kernels.
 
-On CPU (this container) the Pallas body runs in interpret mode; on TPU
+On CPU (this container) the Pallas bodies run in interpret mode; on TPU
 the same BlockSpecs compile to Mosaic.  Query rows are normalized and
-both row axes padded to tile multiples here so the kernel never sees
-ragged blocks.
+both row axes padded to tile multiples here so the kernels never see
+ragged blocks.  The fused-reduction wrappers additionally pad the
+segment axis to lane multiples and give padding docs an out-of-range
+segment slot so they cannot contribute to any sum.
 """
 from __future__ import annotations
 
@@ -14,6 +16,17 @@ from repro.kernels.asym import kernel as _k
 from repro.kernels.common import on_tpu, pad_rows
 
 
+def _prep_queries(query_vecs: jax.Array, tb: int):
+    """Unit-normalize + row-pad the query block; returns (q, B, tb)."""
+    q = jnp.asarray(query_vecs, jnp.float32)
+    if q.ndim == 1:
+        q = q[None, :]
+    b = q.shape[0]
+    tb = min(tb, max(1, b))
+    q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+    return pad_rows(q, tb), b, tb
+
+
 def asym_exp_similarity(query_vecs: jax.Array, db_packed: jax.Array,
                         planes: jax.Array, bits: int,
                         *, tb: int = 8, tm: int = 256,
@@ -22,16 +35,64 @@ def asym_exp_similarity(query_vecs: jax.Array, db_packed: jax.Array,
     exp(temperature * asym-cos).  Queries may have any norm; rows are
     unit-normalized before projection (padding rows stay zero — their
     projections are zero, and the padded outputs are sliced away)."""
-    q = jnp.asarray(query_vecs, jnp.float32)
-    if q.ndim == 1:
-        q = q[None, :]
-    b, m = q.shape[0], db_packed.shape[0]
-    tb = min(tb, max(1, b))
+    q, b, tb = _prep_queries(query_vecs, tb)
+    m = db_packed.shape[0]
     tm = min(tm, max(1, m))
-    q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
-    q = pad_rows(q, tb)
     db = pad_rows(jnp.asarray(db_packed, jnp.uint32), tm)
     out = _k.asym_similarity_kernel(
         q, jnp.asarray(planes, jnp.float32), db, bits,
         tb=tb, tm=tm, interpret=not on_tpu(), temperature=temperature)
     return out[:b, :m]
+
+
+def asym_exp_segment_sum(query_vecs: jax.Array, db_packed: jax.Array,
+                         planes: jax.Array, bits: int, seg_ids: jax.Array,
+                         n_segments: int,
+                         *, tb: int = 8, tm: int = 256,
+                         temperature: float = 1.0) -> jax.Array:
+    """Fused scoring + reduction: [B, dim] x [M, W] -> [B, n_segments]
+    sums of exp(temperature * asym-cos) grouped by ``seg_ids`` (the
+    doc -> segment slot map, int, [M]).  The [B, M] similarity matrix
+    stays in VMEM tile-by-tile and never reaches HBM.
+
+    Rows of ``db_packed`` should be segment-sorted so each TM tile
+    reduces into a narrow band of slots (correctness holds for any
+    order).  The segment axis is padded to a lane multiple in-kernel
+    and sliced back here; padding docs get the out-of-range slot
+    ``s_pad``, so they contribute to nothing."""
+    q, b, tb = _prep_queries(query_vecs, tb)
+    m = db_packed.shape[0]
+    tm = min(tm, max(1, m))
+    db = pad_rows(jnp.asarray(db_packed, jnp.uint32), tm)
+    s_pad = max(128, -(-int(n_segments) // 128) * 128)
+    seg = jnp.asarray(seg_ids, jnp.int32).reshape(1, -1)
+    seg = jnp.pad(seg, ((0, 0), (0, db.shape[0] - m)),
+                  constant_values=s_pad)
+    out = _k.asym_segment_sum_kernel(
+        q, jnp.asarray(planes, jnp.float32), db, seg, bits, s_pad,
+        tb=tb, tm=tm, interpret=not on_tpu(), temperature=temperature)
+    return out[:b, :n_segments]
+
+
+def asym_exp_topk(query_vecs: jax.Array, db_packed: jax.Array,
+                  planes: jax.Array, bits: int, k: int,
+                  *, tb: int = 8, tm: int = 256,
+                  temperature: float = 1.0) -> "tuple[jax.Array, jax.Array]":
+    """Fused scoring + ranked reduction: returns ([B, k] int32 doc
+    indices, [B, k] float32 values), each row sorted by descending
+    exp(temperature * asym-cos).  Stage 1 (in-kernel) keeps only the
+    per-tile top-k; stage 2 reduces the [B, ceil(M/TM)*k] candidate
+    set — the full [B, M] matrix never reaches HBM."""
+    q, b, tb = _prep_queries(query_vecs, tb)
+    m = db_packed.shape[0]
+    k = min(int(k), m)
+    tm = min(tm, max(1, m))
+    tm = max(tm, k)          # a tile must be able to hold k candidates
+    db = pad_rows(jnp.asarray(db_packed, jnp.uint32), tm)
+    vals, idx = _k.asym_topk_kernel(
+        q, jnp.asarray(planes, jnp.float32), db, bits, k, m,
+        tb=tb, tm=tm, interpret=not on_tpu(), temperature=temperature)
+    vals, idx = vals[:b], idx[:b]
+    top_vals, pos = jax.lax.top_k(vals, k)
+    top_idx = jnp.take_along_axis(idx, pos, axis=1)
+    return top_idx, top_vals

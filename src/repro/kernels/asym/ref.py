@@ -22,3 +22,34 @@ def asym_exp_similarity_ref(
     scale = 1.0 / (bits * jnp.sqrt(2.0 / jnp.pi))
     cos = jnp.clip(proj @ signs.T * scale, -1.0, 1.0)
     return jnp.exp(temperature * cos)
+
+
+def asym_exp_segment_sum_ref(
+    query_vecs: jax.Array,   # [B, dim] real-valued, any norm
+    db_packed: jax.Array,    # [M, W] uint32
+    planes: jax.Array,       # [bits, dim]
+    bits: int,
+    seg_ids: jax.Array,      # [M] int doc -> segment slot
+    n_segments: int,
+    temperature: float = 1.0,
+) -> jax.Array:
+    """[B, n_segments] via the unfused [B, M] matrix + jnp segment_sum."""
+    sims = asym_exp_similarity_ref(query_vecs, db_packed, planes, bits,
+                                   temperature)
+    return jax.ops.segment_sum(sims.T, jnp.asarray(seg_ids),
+                               num_segments=n_segments).T
+
+
+def asym_exp_topk_ref(
+    query_vecs: jax.Array,
+    db_packed: jax.Array,
+    planes: jax.Array,
+    bits: int,
+    k: int,
+    temperature: float = 1.0,
+) -> "tuple[jax.Array, jax.Array]":
+    """([B, k] indices, [B, k] values) via the unfused matrix + top_k."""
+    sims = asym_exp_similarity_ref(query_vecs, db_packed, planes, bits,
+                                   temperature)
+    vals, idx = jax.lax.top_k(sims, min(int(k), sims.shape[1]))
+    return idx, vals

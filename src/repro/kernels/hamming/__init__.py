@@ -1,1 +1,5 @@
-from repro.kernels.hamming.ops import hamming_distance, hamming_similarity  # noqa: F401
+from repro.kernels.hamming.ops import (  # noqa: F401
+    hamming_distance,
+    hamming_segment_similarity,
+    hamming_similarity,
+)

@@ -35,9 +35,8 @@ def _distance_kernel(q_ref, db_ref, out_ref):
     out_ref[...] = acc
 
 
-def _similarity_kernel(q_ref, db_ref, out_ref, *, bits: float,
-                       temperature: float):
-    """Fused variant also applying the paper's exp(beta*cos(pi*m/L)) map."""
+def _sim_tile(q_ref, db_ref, bits: float, temperature: float) -> jax.Array:
+    """[TN, TM] exp(beta*cos(pi*m/L)) tile — the shared fusion core."""
     q = q_ref[...]
     db = db_ref[...]
     w = q.shape[1]
@@ -46,7 +45,40 @@ def _similarity_kernel(q_ref, db_ref, out_ref, *, bits: float,
         x = q[:, k][:, None] ^ db[:, k][None, :]
         acc = acc + jax.lax.population_count(x).astype(jnp.int32)
     m = acc.astype(jnp.float32)
-    out_ref[...] = jnp.exp(temperature * jnp.cos(jnp.pi * m / bits))
+    return jnp.exp(temperature * jnp.cos(jnp.pi * m / bits))
+
+
+def _similarity_kernel(q_ref, db_ref, out_ref, *, bits: float,
+                       temperature: float):
+    """Fused variant also applying the paper's exp(beta*cos(pi*m/L)) map."""
+    out_ref[...] = _sim_tile(q_ref, db_ref, bits, temperature)
+
+
+def _segsum_similarity_kernel(q_ref, db_ref, seg_ref, out_ref, *,
+                              bits: float, temperature: float):
+    """Fused similarity + segment reduction (the doc-granular serving
+    path): each (TN, TM) similarity tile is reduced into the resident
+    [TN, S] output by a one-hot matmul against the doc→shard-slot map.
+    The output block's index map ignores the M grid axis, so it stays
+    in VMEM and accumulates over all ceil(M/TM) steps — the [N, M]
+    similarity matrix never reaches HBM.  Padding docs carry an
+    out-of-range slot and contribute to nothing.
+
+    VMEM budget per step (TN=8, TM=512, W=8, S<=1024): tiles + one-hot
+    [TM, S] f32 ~2 MiB << the ~16 MB/core VMEM."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tile = _sim_tile(q_ref, db_ref, bits, temperature)      # [TN, TM]
+    seg = seg_ref[0, ...]                                   # [TM] int32
+    slots = jax.lax.broadcasted_iota(
+        jnp.int32, (seg.shape[0], out_ref.shape[1]), 1)     # [TM, S]
+    onehot = (seg[:, None] == slots).astype(jnp.float32)
+    out_ref[...] += jnp.dot(tile, onehot,
+                            preferred_element_type=jnp.float32)
 
 
 def _tiled_call(kernel_fn, q, db, out_dtype, tn: int, tm: int, interpret: bool):
@@ -98,3 +130,42 @@ def hamming_similarity_kernel(
                                temperature=float(temperature))
     return _tiled_call(kernel, q_packed, db_packed, jnp.float32,
                        tn, tm, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n_segments", "tn", "tm",
+                                             "interpret", "temperature"))
+def hamming_segment_similarity_kernel(
+    q_packed: jax.Array,     # [N, W] uint32
+    db_packed: jax.Array,    # [M, W] uint32, rows segment-sorted
+    seg_ids: jax.Array,      # [1, M] int32 doc -> segment slot
+    bits: int,
+    n_segments: int,         # S (lane-padded by the ops wrapper)
+    *,
+    tn: int = 8,
+    tm: int = 512,
+    interpret: bool = False,
+    temperature: float = 1.0,
+) -> jax.Array:
+    """[N, W] x [M, W] -> [N, S] segment sums of exp(beta*cos(pi*m/L)).
+
+    The M axis is the innermost grid dimension; the output block index
+    map ignores it, so each [TN, S] block accumulates in VMEM across
+    the whole M sweep (classic K-reduction matmul layout)."""
+    n, w = q_packed.shape
+    m, w2 = db_packed.shape
+    assert w == w2, (w, w2)
+    kernel = functools.partial(_segsum_similarity_kernel, bits=float(bits),
+                               temperature=float(temperature))
+    grid = (pl.cdiv(n, tn), pl.cdiv(m, tm))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((tm, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, tm), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tn, n_segments), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n_segments), jnp.float32),
+        interpret=interpret,
+    )(q_packed, db_packed, seg_ids)

@@ -37,3 +37,30 @@ def hamming_similarity(q_packed: jax.Array, db_packed: jax.Array, bits: int,
                                        interpret=not on_tpu(),
                                        temperature=temperature)
     return out[:n, :m]
+
+
+def hamming_segment_similarity(q_packed: jax.Array, db_packed: jax.Array,
+                               bits: int, seg_ids: jax.Array,
+                               n_segments: int,
+                               *, tn: int = 8, tm: int = 512,
+                               temperature: float = 1.0) -> jax.Array:
+    """Fused scoring + reduction: [N, W] x [M, W] -> [N, n_segments]
+    sums of exp(beta*cos(pi*m/L)) grouped by ``seg_ids`` (the doc ->
+    segment slot map, int, [M]).  The [N, M] similarity matrix stays
+    in VMEM tile-by-tile and never reaches HBM.  Rows of ``db_packed``
+    should be segment-sorted so each TM tile reduces into a narrow
+    band of slots (correctness holds for any order); padding docs get
+    an out-of-range slot and contribute to nothing."""
+    n, m = q_packed.shape[0], db_packed.shape[0]
+    tn = min(tn, max(1, n))
+    tm = min(tm, max(1, m))
+    q = pad_rows(jnp.asarray(q_packed, jnp.uint32), tn)
+    db = pad_rows(jnp.asarray(db_packed, jnp.uint32), tm)
+    s_pad = max(128, -(-int(n_segments) // 128) * 128)
+    seg = jnp.asarray(seg_ids, jnp.int32).reshape(1, -1)
+    seg = jnp.pad(seg, ((0, 0), (0, db.shape[0] - m)),
+                  constant_values=s_pad)
+    out = _k.hamming_segment_similarity_kernel(
+        q, db, seg, bits, s_pad, tn=tn, tm=tm,
+        interpret=not on_tpu(), temperature=temperature)
+    return out[:n, :n_segments]

@@ -15,3 +15,13 @@ def hamming_similarity_ref(q_packed: jax.Array, db_packed: jax.Array,
                            bits: int) -> jax.Array:
     m = hamming_distance_ref(q_packed, db_packed).astype(jnp.float32)
     return jnp.exp(jnp.cos(jnp.pi * m / bits))
+
+
+def hamming_segment_similarity_ref(q_packed: jax.Array, db_packed: jax.Array,
+                                   bits: int, seg_ids: jax.Array,
+                                   n_segments: int,
+                                   temperature: float = 1.0) -> jax.Array:
+    """[N, n_segments] via the unfused [N, M] matrix + jnp segment_sum."""
+    sims = hamming_similarity_ref(q_packed, db_packed, bits) ** temperature
+    return jax.ops.segment_sum(sims.T, jnp.asarray(seg_ids),
+                               num_segments=n_segments).T

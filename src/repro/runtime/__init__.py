@@ -1,1 +1,2 @@
 from repro.runtime.executor import ShardTaskExecutor  # noqa: F401
+from repro.runtime.window import BatchWindow  # noqa: F401

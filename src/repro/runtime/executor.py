@@ -8,7 +8,18 @@ tasks run on a worker pool with
     ``straggler_factor``x the median completion time, duplicates are
     speculatively launched and the first finisher wins (the classic
     MapReduce backup-task trick),
-  * elastic worker count: pool size can change between jobs.
+  * elastic worker count: pool size can change between jobs,
+  * a *warm* pool: the thread pool is built lazily on the first job and
+    kept alive across jobs (long-lived serving was paying a pool
+    construction + teardown per batch), rebuilt only when the target
+    worker count changes; ``close()`` (or the context manager) tears it
+    down,
+  * adaptive worker count by task granularity
+    (``adaptive_workers=True``): tiny numpy tasks are GIL-bound — the
+    lock convoy makes 4+ workers *slower* than 1-2 — so when the last
+    job's median task time falls under ``gil_floor_s`` the pool shrinks
+    to 2 workers; it widens back to ``workers`` as soon as tasks are
+    long enough to release the GIL meaningfully.
 
 On a TPU cluster the same policy applies at pod granularity (a pod is a
 worker; shards are its resident data) — the executor keeps that mapping
@@ -60,6 +71,8 @@ class ShardTaskExecutor:
         min_completed_for_speculation: int = 4,
         fault_hook: Optional[Callable[[int, int], None]] = None,
         min_straggler_s: float = 0.05,
+        adaptive_workers: bool = False,
+        gil_floor_s: float = 1e-3,
     ):
         self.workers = workers
         self.max_retries = max_retries
@@ -72,11 +85,71 @@ class ShardTaskExecutor:
         # duplicate healthy tasks — a backup task is only worth
         # launching for work at least as long as a scheduling quantum.
         self.min_straggler_s = min_straggler_s
-        self.stats: Dict[str, int] = {"retries": 0, "speculative": 0}
+        self.adaptive_workers = adaptive_workers
+        self.gil_floor_s = gil_floor_s
+        self.stats: Dict[str, int] = {"retries": 0, "speculative": 0,
+                                      "jobs": 0, "pool_rebuilds": 0}
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pool_size = 0
+        self._pool_lock = threading.Lock()
+        self._active_jobs = 0
+        self._median_task_s: Optional[float] = None
 
     def resize(self, workers: int) -> None:
-        """Elastic scaling between jobs."""
+        """Elastic scaling between jobs (the warm pool is swapped on the
+        next job, not mid-flight)."""
         self.workers = max(1, workers)
+
+    # ------------------------------------------------------------------
+    # warm pool management
+    # ------------------------------------------------------------------
+    def target_workers(self) -> int:
+        """Worker count the next job will run with: the configured width
+        unless adaptive granularity scaling says the tasks are too small
+        to parallelize (GIL-bound numpy ops favor 1-2 workers)."""
+        w = max(1, int(self.workers))
+        if (self.adaptive_workers and self._median_task_s is not None
+                and self._median_task_s < self.gil_floor_s):
+            w = min(w, 2)
+        return w
+
+    def _acquire_pool(self) -> ThreadPoolExecutor:
+        """Check out the long-lived worker pool for one job, (re)built
+        only when the target width changed *and* no other job is using
+        it — a mid-flight swap would shut the pool down under the other
+        job's submits.  Concurrent jobs simply share the current width
+        until the executor goes idle.  Balance with ``_release_pool``."""
+        with self._pool_lock:
+            target = self.target_workers()
+            if self._pool is None or (self._pool_size != target
+                                      and self._active_jobs == 0):
+                if self._pool is not None:
+                    self._pool.shutdown(wait=False)
+                self._pool = ThreadPoolExecutor(
+                    max_workers=target, thread_name_prefix="shard-worker")
+                self._pool_size = target
+                self.stats["pool_rebuilds"] += 1
+            self._active_jobs += 1
+            return self._pool
+
+    def _release_pool(self) -> None:
+        with self._pool_lock:
+            self._active_jobs -= 1
+
+    def close(self) -> None:
+        """Tear down the warm pool (idempotent).  Call when no job is
+        in flight — shutting down under a running ``map_shards`` fails
+        that job's remaining submits."""
+        with self._pool_lock:
+            pool, self._pool, self._pool_size = self._pool, None, 0
+        if pool is not None:
+            pool.shutdown(wait=True)
+
+    def __enter__(self) -> "ShardTaskExecutor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def map_shards(
         self,
@@ -95,6 +168,19 @@ class ShardTaskExecutor:
         sizes cost more than the shard work itself.)  Straggler checks
         run on 50 ms ticks and on each completion.
         """
+        pool = self._acquire_pool()
+        try:
+            return self._run_job(pool, corpus, shard_ids, fn)
+        finally:
+            self._release_pool()
+
+    def _run_job(
+        self,
+        pool: ThreadPoolExecutor,
+        corpus,
+        shard_ids: Sequence[int],
+        fn: Callable[[Any], Any],
+    ) -> Dict[int, Any]:
         ids = [int(s) for s in shard_ids]
         results: Dict[int, Any] = {}
         attempts: Dict[int, int] = {i: 0 for i in ids}
@@ -123,75 +209,88 @@ class ShardTaskExecutor:
         durations: list = []
         speculated: set = set()
 
-        with ThreadPoolExecutor(max_workers=self.workers) as pool:
+        def submit(sid: int) -> None:
+            nonlocal in_flight
+            with lock:
+                attempts[sid] += 1
+                attempt = attempts[sid]
+            fut = pool.submit(run_one, sid, attempt)
+            fut.add_done_callback(
+                lambda f, sid=sid, a=attempt: completions.put(
+                    (sid, a, f)))
+            in_flight += 1
 
-            def submit(sid: int) -> None:
-                nonlocal in_flight
-                with lock:
-                    attempts[sid] += 1
-                    attempt = attempts[sid]
-                fut = pool.submit(run_one, sid, attempt)
-                fut.add_done_callback(
-                    lambda f, sid=sid, a=attempt: completions.put(
-                        (sid, a, f)))
-                in_flight += 1
+        last_check = time.perf_counter()
 
-            last_check = time.perf_counter()
-
-            def check_stragglers(now: float) -> None:
-                nonlocal last_check
-                if len(durations) < self.min_completed:
-                    return
-                if now - last_check < 0.05:  # O(ids) scan, throttled
-                    return
-                last_check = now
-                median = float(np.median(durations))
-                threshold = self.straggler_factor * max(
-                    median, self.min_straggler_s)
-                for sid in ids:
-                    if sid in results or sid in speculated:
-                        continue
-                    with lock:
-                        t_run = min(live[sid].values(), default=None)
-                    if t_run is not None and now - t_run > threshold:
-                        speculated.add(sid)
-                        self.stats["speculative"] += 1
-                        submit(sid)
-
+        def check_stragglers(now: float) -> None:
+            nonlocal last_check
+            if len(durations) < self.min_completed:
+                return
+            if now - last_check < 0.05:  # O(ids) scan, throttled
+                return
+            last_check = now
+            median = float(np.median(durations))
+            threshold = self.straggler_factor * max(
+                median, self.min_straggler_s)
             for sid in ids:
-                submit(sid)
-            while in_flight:
-                try:
-                    sid, attempt, fut = completions.get(timeout=0.05)
-                except queue.Empty:
-                    check_stragglers(time.perf_counter())
+                if sid in results or sid in speculated:
                     continue
-                in_flight -= 1
-                now = time.perf_counter()
-                try:
-                    res = fut.result()
-                    with lock:
-                        t_start = live[sid].pop(attempt, now)
-                    if sid not in results:
-                        results[sid] = res
-                        durations.append(now - t_start)
-                except Exception:
-                    with lock:
-                        live[sid].pop(attempt, None)
-                    if sid in results:
-                        pass  # a speculative duplicate failed after the
-                              # original already delivered — nothing to redo
-                    elif attempts[sid] <= self.max_retries:
-                        self.stats["retries"] += 1
-                        submit(sid)
-                    else:
-                        raise ShardTaskError(
-                            f"shard {sid} failed after "
-                            f"{attempts[sid]} attempts")
+                with lock:
+                    t_run = min(live[sid].values(), default=None)
+                if t_run is not None and now - t_run > threshold:
+                    speculated.add(sid)
+                    self.stats["speculative"] += 1
+                    submit(sid)
+
+        # On permanent failure the error is *recorded*, submissions stop,
+        # and the loop still drains every in-flight future before the
+        # exception escapes — the old per-job pool got this quiescence
+        # from its `with` shutdown; the shared warm pool must not be
+        # left running zombie tasks that would queue-jam the next job.
+        fatal: Optional[ShardTaskError] = None
+        for sid in ids:
+            submit(sid)
+        while in_flight:
+            try:
+                sid, attempt, fut = completions.get(timeout=0.05)
+            except queue.Empty:
+                if fatal is None:
+                    check_stragglers(time.perf_counter())
+                continue
+            in_flight -= 1
+            now = time.perf_counter()
+            try:
+                res = fut.result()
+                with lock:
+                    t_start = live[sid].pop(attempt, now)
+                if sid not in results:
+                    results[sid] = res
+                    durations.append(now - t_start)
+            except Exception:
+                with lock:
+                    live[sid].pop(attempt, None)
+                if sid in results or fatal is not None:
+                    pass  # a speculative duplicate failed after the
+                          # original already delivered, or the job is
+                          # already failing — nothing to redo
+                elif attempts[sid] <= self.max_retries:
+                    self.stats["retries"] += 1
+                    submit(sid)
+                else:
+                    fatal = ShardTaskError(
+                        f"shard {sid} failed after "
+                        f"{attempts[sid]} attempts")
+            if fatal is None:
                 check_stragglers(now)
+        if fatal is not None:
+            raise fatal
         missing = [s for s in ids if s not in results]
         if missing:
             raise ShardTaskError(f"shards never completed: {missing}")
+        if durations:
+            # feeds adaptive granularity scaling for the next job
+            self._median_task_s = float(np.median(durations))
+        self.stats["jobs"] += 1
         return results
 
     def map_shard_batch(

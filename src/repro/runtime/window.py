@@ -1,0 +1,172 @@
+"""Adaptive batch-window serving frontend.
+
+``QueryBatch`` executes fixed, client-chosen batches; a serving process
+instead sees a *stream* of single queries.  ``BatchWindow`` sits in
+between: callers ``submit`` individual queries and get a future back,
+and a dispatcher thread closes the open window when either
+
+  * the window reaches ``max_batch`` queries (high traffic — full
+    shared-scan amortization), or
+  * ``max_delay_s`` has elapsed since the window's oldest query arrived
+    (low traffic — bounded latency; the default 2 ms deadline is small
+    next to per-shard scan times but large next to scoring dispatch).
+
+Each closed window executes as one ``QueryBatch.execute`` call —
+one batched scoring pass, one shared scan over the union of sampled
+shards — on a single dispatcher thread, so the engine's rng draws stay
+in a deterministic stream.  ``flush()`` force-closes the open window;
+``close()`` drains everything and stops the dispatcher.
+
+The win: low-traffic periods keep latency (a lone query waits at most
+the deadline, not for a full batch), high-traffic periods batch up to
+``max_batch`` and inherit the batched engine's ~6x throughput (see
+BENCH_serve.json's ``windowed`` row).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class BatchWindow:
+    """Deadline/size-closed batching frontend over a ``QueryBatch``
+    engine.  One instance owns one dispatcher thread; it is safe to
+    submit from many producer threads."""
+
+    def __init__(
+        self,
+        engine,
+        rate: float,
+        *,
+        max_batch: int = 32,
+        max_delay_s: float = 0.002,
+        rng: Optional[np.random.Generator] = None,
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_delay_s < 0:
+            raise ValueError(f"max_delay_s must be >= 0, got {max_delay_s}")
+        self.engine = engine
+        self.rate = rate
+        self.max_batch = int(max_batch)
+        self.max_delay_s = float(max_delay_s)
+        self._rng = rng or np.random.default_rng(0)
+        self._wake = threading.Condition()
+        self._pending: List[Tuple[Any, Future]] = []
+        self._first_arrival: Optional[float] = None
+        self._flush = False
+        self._closed = False
+        self.stats: Dict[str, int] = {
+            "batches": 0, "served": 0, "cancelled": 0,
+            "closed_by_size": 0, "closed_by_deadline": 0,
+            "closed_by_flush": 0,
+        }
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="batch-window")
+        self._thread.start()
+
+    # ------------------------------------------------------------------
+    # producer side
+    # ------------------------------------------------------------------
+    def submit(self, query) -> "Future":
+        """Enqueue one query; the future resolves to the same result
+        object ``QueryBatch.execute`` would return for it."""
+        fut: Future = Future()
+        with self._wake:
+            if self._closed:
+                raise RuntimeError("BatchWindow is closed")
+            self._pending.append((query, fut))
+            if self._first_arrival is None:
+                self._first_arrival = time.perf_counter()
+            self._wake.notify_all()
+        return fut
+
+    def flush(self) -> None:
+        """Force-close the open window without waiting for the deadline
+        (returns immediately; wait on the submitted futures)."""
+        with self._wake:
+            if self._pending:
+                self._flush = True
+                self._wake.notify_all()
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Drain all pending queries, then stop the dispatcher."""
+        with self._wake:
+            self._closed = True
+            self._wake.notify_all()
+        self._thread.join(timeout)
+
+    def __enter__(self) -> "BatchWindow":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------
+    # dispatcher
+    # ------------------------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            with self._wake:
+                while not self._pending and not self._closed:
+                    self._flush = False        # nothing left to flush
+                    self._wake.wait()
+                if not self._pending and self._closed:
+                    return
+                # a window is open: wait for size, flush, or deadline
+                deadline = self._first_arrival + self.max_delay_s
+                while (len(self._pending) < self.max_batch
+                       and not self._flush and not self._closed):
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0:
+                        break
+                    self._wake.wait(timeout=remaining)
+                batch = self._pending[: self.max_batch]
+                del self._pending[: self.max_batch]
+                if len(batch) >= self.max_batch:
+                    reason = "size"
+                elif self._flush or self._closed:
+                    reason = "flush"
+                else:
+                    reason = "deadline"
+                # the remainder opens a fresh window "now" — close
+                # enough to the true oldest-remaining arrival, and it
+                # never *extends* any query's wait past one full window
+                self._first_arrival = (time.perf_counter()
+                                       if self._pending else None)
+                if not self._pending:
+                    self._flush = False
+            self._run_batch(batch, reason)
+
+    def _run_batch(self, batch: List[Tuple[Any, Future]],
+                   reason: str) -> None:
+        # Claim every future before executing: a caller may have
+        # cancel()ed while it sat PENDING in the window.  Marking the
+        # survivors RUNNING means no later cancel can win the race and
+        # make set_result raise InvalidStateError (which would kill the
+        # dispatcher thread for good).
+        claimed = [(q, f) for q, f in batch
+                   if f.set_running_or_notify_cancel()]
+        dropped = len(batch) - len(claimed)
+        if claimed:
+            queries = [q for q, _ in claimed]
+            try:
+                results = self.engine.execute(queries, self.rate,
+                                              rng=self._rng)
+            except BaseException as exc:  # deliver failures to every waiter
+                for _, fut in claimed:
+                    fut.set_exception(exc)
+            else:
+                for (_, fut), res in zip(claimed, results):
+                    fut.set_result(res)
+        with self._wake:
+            self.stats["cancelled"] += dropped
+            if not claimed:
+                return
+            self.stats["batches"] += 1
+            self.stats["served"] += len(claimed)
+            self.stats[f"closed_by_{reason}"] += 1

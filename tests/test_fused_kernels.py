@@ -1,0 +1,191 @@
+"""Fused in-kernel reductions: segment-sum and top-k variants of the
+asym / hamming scoring kernels vs the unfused [B, M] + numpy/jnp
+reduce references (interpret mode on CPU per the harness contract),
+and the ApproxIndex-level fused routes vs their unfused parity paths."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lsh as lsh_mod
+from repro.kernels.asym import ops as aops
+from repro.kernels.asym import ref as aref
+from repro.kernels.hamming import ops as hops
+from repro.kernels.hamming import ref as href
+
+QUERIES = [[3, 5, 9], [2], [10, 11], [7, 4, 5, 6]]
+
+
+def _asym_setup(b, m, dim, bits, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, dim)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(m, dim)).astype(np.float32))
+    planes = lsh_mod.hyperplanes(lsh_mod.LSHConfig(bits=bits), dim)
+    db = lsh_mod.pack_bits(lsh_mod.signature_bits(x, planes))
+    return rng, q, planes, db
+
+
+# ----------------------------------------------------------------------
+# kernel-level: fused segment sum vs unfused matrix + reduce
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("b,m,s,dim,bits,temp", [
+    (1, 7, 3, 24, 128, 1.0),        # single query, tiny tile
+    (5, 613, 37, 48, 128, 8.0),     # ragged M, many segments
+    (9, 300, 128, 32, 64, 4.0),     # S == lane width exactly
+    (3, 1000, 5, 48, 256, 8.0),     # M over several tiles
+])
+def test_asym_segment_sum_matches_unfused(b, m, s, dim, bits, temp):
+    rng, q, planes, db = _asym_setup(b, m, dim, bits, seed=b * 100 + m)
+    seg = np.sort(rng.integers(0, s, m)).astype(np.int32)
+    got = aops.asym_exp_segment_sum(q, db, planes, bits, seg, s,
+                                    temperature=temp)
+    # unfused reference: full [B, M] matrix, then a numpy segment reduce
+    sims = np.asarray(aref.asym_exp_similarity_ref(q, db, planes, bits, temp),
+                      np.float64)
+    want = np.stack([np.bincount(seg, weights=row, minlength=s)
+                     for row in sims])
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4)
+
+
+def test_asym_segment_sum_empty_and_unsorted_segments():
+    rng, q, planes, db = _asym_setup(4, 200, 32, 128, seed=0)
+    s = 16
+    # all docs in one segment: every other slot must be exactly zero
+    seg = np.full(200, 5, np.int32)
+    got = np.asarray(aops.asym_exp_segment_sum(q, db, planes, 128, seg, s))
+    assert (got[:, 5] > 0).all()
+    mask = np.ones(s, bool)
+    mask[5] = False
+    np.testing.assert_array_equal(got[:, mask], 0.0)
+    # correctness must not depend on segment-sorted doc order
+    seg = rng.integers(0, s, 200).astype(np.int32)
+    got = np.asarray(aops.asym_exp_segment_sum(q, db, planes, 128, seg, s))
+    sims = np.asarray(aref.asym_exp_similarity_ref(q, db, planes, 128, 1.0),
+                      np.float64)
+    want = np.stack([np.bincount(seg, weights=row, minlength=s)
+                     for row in sims])
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+@pytest.mark.parametrize("n,m,s,bits,temp", [
+    (4, 300, 37, 128, 8.0), (1, 64, 3, 64, 1.0), (8, 1000, 121, 256, 4.0),
+])
+def test_hamming_segment_sum_matches_unfused(n, m, s, bits, temp):
+    rng = np.random.default_rng(n * 10 + m)
+    w = bits // 32
+    q = jnp.asarray(rng.integers(0, 2**32, (n, w), dtype=np.uint32))
+    db = jnp.asarray(rng.integers(0, 2**32, (m, w), dtype=np.uint32))
+    seg = np.sort(rng.integers(0, s, m)).astype(np.int32)
+    got = hops.hamming_segment_similarity(q, db, bits, seg, s,
+                                          temperature=temp)
+    sims = np.asarray(href.hamming_similarity_ref(q, db, bits),
+                      np.float64) ** temp
+    want = np.stack([np.bincount(seg, weights=row, minlength=s)
+                     for row in sims])
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# kernel-level: fused top-k vs argsort over the unfused matrix
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("b,m,k,dim,bits,temp", [
+    (3, 257, 10, 48, 128, 8.0),     # k << tile, ragged M
+    (5, 100, 100, 32, 64, 4.0),     # k == M (full sort)
+    (2, 700, 300, 24, 128, 1.0),    # k > default tile width
+])
+def test_asym_topk_matches_argsort(b, m, k, dim, bits, temp):
+    _, q, planes, db = _asym_setup(b, m, dim, bits, seed=b + m + k)
+    idx, vals = aops.asym_exp_topk(q, db, planes, bits, k, temperature=temp)
+    sims = np.asarray(aref.asym_exp_similarity_ref(q, db, planes, bits, temp))
+    order = np.argsort(-sims, axis=1, kind="stable")[:, :k]
+    want_vals = np.take_along_axis(sims, order, axis=1)
+    # values must agree; indices may differ only where values tie
+    np.testing.assert_allclose(np.asarray(vals), want_vals, rtol=1e-4)
+    picked = np.take_along_axis(sims, np.asarray(idx), axis=1)
+    np.testing.assert_allclose(picked, np.asarray(vals), rtol=1e-5)
+    # rows sorted descending
+    v = np.asarray(vals)
+    assert (np.diff(v, axis=1) <= 1e-6).all()
+
+
+# ----------------------------------------------------------------------
+# index-level: fused routes vs unfused parity paths
+# ----------------------------------------------------------------------
+def _doc_kernel_index(built_index, corpus, lsh_mode):
+    return dataclasses.replace(
+        built_index, granularity="doc", use_kernel=True,
+        lsh_mode=lsh_mode).attach_corpus(corpus)
+
+
+@pytest.mark.parametrize("lsh_mode", ["asym", "sym"])
+def test_index_fused_shard_sims_match_unfused(small_corpus, built_index,
+                                              lsh_mode):
+    idx = _doc_kernel_index(built_index, small_corpus, lsh_mode)
+    fused = idx.shard_similarities_batch(QUERIES, fused=True)
+    unfused = idx.shard_similarities_batch(QUERIES, fused=False)
+    assert fused.shape == (len(QUERIES), small_corpus.n_shards)
+    np.testing.assert_allclose(fused, unfused, rtol=1e-4)
+
+
+def test_index_fused_matches_single_query_loop(small_corpus, built_index):
+    idx = _doc_kernel_index(built_index, small_corpus, "asym")
+    fused = idx.shard_similarities_batch(QUERIES, fused=True)
+    singles = np.stack([idx.shard_similarities(q) for q in QUERIES])
+    np.testing.assert_allclose(fused, singles, rtol=1e-4)
+
+
+def test_index_topk_fused_matches_argsort(small_corpus, built_index):
+    idx = _doc_kernel_index(built_index, small_corpus, "asym")
+    ids_f, vals_f = idx.topk_doc_similarities_batch(QUERIES, k=9, fused=True)
+    ids_r, vals_r = idx.topk_doc_similarities_batch(QUERIES, k=9, fused=False)
+    assert ids_f.shape == vals_f.shape == (len(QUERIES), 9)
+    np.testing.assert_allclose(vals_f, vals_r, rtol=1e-4)
+    # fused picks must carry their true similarity values
+    sims = idx._exp_sim_batch(idx.query_vectors(QUERIES), idx.doc_sig,
+                              idx.doc_vecs, "doc")
+    picked = np.take_along_axis(sims, ids_f, axis=1)
+    np.testing.assert_allclose(picked, vals_f, rtol=1e-4)
+
+
+def test_index_topk_requires_doc_vectors(built_index):
+    idx = dataclasses.replace(built_index, doc_sig=None, doc_vecs=None)
+    with pytest.raises(ValueError):
+        idx.topk_doc_similarities_batch(QUERIES, k=3)
+
+
+def test_sum_docs_to_shards_batch_vectorized_matches_bincount(
+        small_corpus, built_index):
+    """The reduceat rewrite is exactly the per-row bincount it replaced
+    (incl. rows of zeros and the B=1 edge)."""
+    idx = dataclasses.replace(built_index,
+                              granularity="doc").attach_corpus(small_corpus)
+    rng = np.random.default_rng(7)
+    vals = rng.uniform(0.0, 5.0, (6, small_corpus.n_docs))
+    vals[2] = 0.0
+    got = idx._sum_docs_to_shards_batch(vals)
+    want = np.stack([np.bincount(idx._doc_shard_ids, weights=row,
+                                 minlength=small_corpus.n_shards)
+                     for row in vals])
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-12)
+    one = idx._sum_docs_to_shards_batch(vals[:1])
+    np.testing.assert_allclose(one, want[:1], rtol=1e-10, atol=1e-12)
+
+
+def test_sum_docs_to_shards_batch_trailing_empty_shards(built_index):
+    """Regression: a trailing empty shard (possible after reallocate
+    leaves a k-means cluster empty) must not truncate the last
+    non-empty shard's sum."""
+    idx = dataclasses.replace(built_index)
+    idx.shard_vecs = idx.shard_vecs[:4]
+    # 2 docs both in shard 0; shards 1..3 empty (incl. the tail)
+    idx._doc_shard_ids = np.asarray([0, 0], np.int64)
+    got = idx._sum_docs_to_shards_batch(np.asarray([[1.0, 2.0]]))
+    np.testing.assert_allclose(got, [[3.0, 0.0, 0.0, 0.0]])
+    # empty shard sandwiched between non-empty ones
+    idx._shard_sort = None              # drop the cached sort structures
+    idx._doc_shard_ids = np.asarray([0, 0, 2, 3], np.int64)
+    got = idx._sum_docs_to_shards_batch(
+        np.asarray([[1.0, 2.0, 4.0, 8.0], [1.0, 1.0, 1.0, 1.0]]))
+    np.testing.assert_allclose(got, [[3.0, 0.0, 4.0, 8.0],
+                                     [2.0, 0.0, 1.0, 1.0]])

@@ -81,6 +81,69 @@ def test_executor_elastic_resize():
     assert len(out) == 20
 
 
+def test_executor_failure_drains_in_flight_tasks():
+    """Regression: ShardTaskError must not escape while sibling tasks
+    are still running on the shared warm pool (the old per-job pool
+    guaranteed quiescence via its `with` shutdown)."""
+    running = {"n": 0}
+    lock = threading.Lock()
+
+    def work(shard):
+        if shard.shard_id == 5:
+            raise RuntimeError("dead shard")
+        with lock:
+            running["n"] += 1
+        time.sleep(0.15)
+        with lock:
+            running["n"] -= 1
+        return shard.shard_id
+
+    ex = ShardTaskExecutor(workers=4, max_retries=0)
+    with pytest.raises(ShardTaskError):
+        ex.map_shards(_FakeCorpus(8), range(8), work)
+    assert running["n"] == 0          # no zombie tasks past the raise
+    ex.close()
+
+
+def test_executor_warm_pool_persists_across_jobs():
+    ex = ShardTaskExecutor(workers=3)
+    ex.map_shards(_FakeCorpus(10), range(10), lambda s: s.shard_id)
+    pool = ex._pool
+    assert pool is not None
+    ex.map_shards(_FakeCorpus(6), range(6), lambda s: s.shard_id)
+    assert ex._pool is pool                   # no per-job construction
+    assert ex.stats["pool_rebuilds"] == 1
+    assert ex.stats["jobs"] == 2
+    ex.resize(5)                              # swap happens on next job
+    assert ex._pool is pool
+    ex.map_shards(_FakeCorpus(4), range(4), lambda s: 1)
+    assert ex._pool is not pool and ex._pool_size == 5
+    assert ex.stats["pool_rebuilds"] == 2
+    ex.close()
+    assert ex._pool is None
+    ex.close()                                # idempotent
+
+
+def test_executor_adaptive_workers_by_task_granularity():
+    # generous floor so ~us numpy-ish tasks are unambiguously "tiny"
+    ex = ShardTaskExecutor(workers=8, adaptive_workers=True,
+                           gil_floor_s=0.02)
+    assert ex.target_workers() == 8           # no evidence yet
+    ex.map_shards(_FakeCorpus(16), range(16), lambda s: s.shard_id)
+    assert ex.target_workers() == 2           # GIL-bound tasks -> shrink
+    ex.map_shards(_FakeCorpus(4), range(4),
+                  lambda s: time.sleep(0.1) or s.shard_id)
+    assert ex.target_workers() == 8           # long tasks -> widen back
+    ex.close()
+
+
+def test_executor_context_manager_closes_pool():
+    with ShardTaskExecutor(workers=2) as ex:
+        ex.map_shards(_FakeCorpus(4), range(4), lambda s: 1)
+        assert ex._pool is not None
+    assert ex._pool is None
+
+
 # ----------------------------------------------------------------------
 # checkpointing
 # ----------------------------------------------------------------------

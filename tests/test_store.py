@@ -60,6 +60,19 @@ def test_reallocate_preserves_documents(small_corpus):
     np.testing.assert_array_equal(m, assign)
 
 
+def test_segment_sum_trailing_empty_doc():
+    """Regression: an empty doc at the end must not truncate the last
+    non-empty doc's sum (reduceat start-clamping folded it away)."""
+    from repro.data.store import segment_sum_by_offsets
+    vals = np.asarray([1.0, 2.0, 4.0])
+    offsets = np.asarray([0, 1, 3, 3])          # docs: [1], [2,4], []
+    np.testing.assert_allclose(segment_sum_by_offsets(vals, offsets),
+                               [1.0, 6.0, 0.0])
+    offsets = np.asarray([0, 0, 3, 3])          # empty at both ends
+    np.testing.assert_allclose(segment_sum_by_offsets(vals, offsets),
+                               [0.0, 7.0, 0.0])
+
+
 def test_docs_matching_all():
     docs = [Document(0, np.asarray([1, 2, 3], np.int32)),
             Document(1, np.asarray([1, 1], np.int32)),
@@ -73,3 +86,61 @@ def test_corpus_shard_budget(small_corpus):
     # sequential allocation: every shard except the last near the budget
     sizes = small_corpus.shard_token_counts()
     assert (sizes[:-1] >= 4096).all()
+
+
+# ----------------------------------------------------------------------
+# persistence: shard payload + postings round-trip
+# ----------------------------------------------------------------------
+def _tiny_corpus(seed=0, n_docs=40, vocab=50):
+    rng = np.random.default_rng(seed)
+    docs = [Document(i, rng.integers(0, vocab, rng.integers(1, 30))
+                     .astype(np.int32)) for i in range(n_docs)]
+    return ShardedCorpus.from_documents(docs, vocab, shard_tokens=100)
+
+
+def test_corpus_save_load_roundtrip(tmp_path):
+    from repro.data.store import shard_postings
+    corpus = _tiny_corpus()
+    path = str(tmp_path / "corpus.npz")
+    corpus.save(path)
+    loaded = ShardedCorpus.load(path)
+    assert loaded.n_shards == corpus.n_shards
+    assert loaded.n_docs == corpus.n_docs
+    assert loaded.vocab_size == corpus.vocab_size
+    for s, s2 in zip(corpus.shards, loaded.shards):
+        np.testing.assert_array_equal(s.tokens, s2.tokens)
+        np.testing.assert_array_equal(s.offsets, s2.offsets)
+        np.testing.assert_array_equal(s.doc_ids, s2.doc_ids)
+    assert loaded.count_phrase([3]) == corpus.count_phrase([3])
+    np.testing.assert_array_equal(loaded.doc_shard_map(),
+                                  corpus.doc_shard_map())
+
+
+def test_corpus_save_persists_postings(tmp_path):
+    """Postings ride along with the payload: a cold open serves its
+    first query from the persisted CSR, no lazy rebuild."""
+    from repro.data.store import build_postings, shard_postings
+    corpus = _tiny_corpus(seed=1)
+    path = str(tmp_path / "corpus.npz")
+    corpus.save(path)                        # builds + persists postings
+    loaded = ShardedCorpus.load(path)
+    for shard in loaded.shards:
+        pre_attached = getattr(shard, "_postings", None)
+        assert pre_attached is not None      # cache hit from query one
+        assert shard_postings(shard) is pre_attached
+        fresh = build_postings(shard)
+        np.testing.assert_array_equal(pre_attached.indptr, fresh.indptr)
+        np.testing.assert_array_equal(pre_attached.doc_idx, fresh.doc_idx)
+        np.testing.assert_array_equal(pre_attached.tf, fresh.tf)
+
+
+def test_corpus_save_without_postings_stays_lazy(tmp_path):
+    corpus = _tiny_corpus(seed=2)
+    path = str(tmp_path / "raw.npz")
+    corpus.save(path, include_postings=False)
+    loaded = ShardedCorpus.load(path)
+    assert all(getattr(s, "_postings", None) is None for s in loaded.shards)
+    # lazily built on demand, exactly as before persistence existed
+    w = int(loaded.shards[0].tokens[0])
+    from repro.data.store import shard_postings
+    assert shard_postings(loaded.shards[0]).word_count(w) > 0
