@@ -1,0 +1,64 @@
+"""Serving-bench regression gate (the CI serve-smoke floor).
+
+Compares a freshly produced ``BENCH_serve.json`` against the committed
+baseline and fails (exit 1) when the ``batched_fused`` throughput drops
+more than ``--tolerance`` (default 25%) below it.  The wide tolerance
+absorbs runner-to-runner CPU variance while still catching the real
+regressions this gate exists for: a serialization point sneaking back
+into the batched scoring path, postings caches being rebuilt per batch,
+or the fused reduction silently falling back to per-query execution.
+
+  PYTHONPATH=src python -m benchmarks.check_regression /tmp/bench.json
+
+When the hardware generation of the CI runners changes legitimately,
+re-run ``python -m benchmarks.serve_bench --smoke`` on the new runners
+and refresh ``benchmarks/baselines/serve_smoke.json`` (every CI run
+uploads its JSON as a workflow artifact to make that painless).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                                "serve_smoke.json")
+
+
+def check(current_path: str, baseline_path: str = DEFAULT_BASELINE,
+          key: str = "batched_fused", tolerance: float = 0.25) -> int:
+    with open(current_path) as f:
+        current = json.load(f)
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    try:
+        cur_qps = float(current[key]["qps"])
+    except KeyError:
+        print(f"FAIL: {current_path} has no '{key}' row — the serving "
+              f"bench did not exercise the fused batched path")
+        return 1
+    try:
+        base_qps = float(baseline[key]["qps"])
+    except KeyError:
+        print(f"FAIL: baseline {baseline_path} has no '{key}' row — "
+              f"refresh it from a full smoke run")
+        return 1
+    floor = (1.0 - tolerance) * base_qps
+    verdict = "OK" if cur_qps >= floor else "FAIL"
+    print(f"{verdict}: {key} {cur_qps:.1f} q/s vs baseline "
+          f"{base_qps:.1f} q/s (floor {floor:.1f}, "
+          f"tolerance {tolerance:.0%})")
+    return 0 if cur_qps >= floor else 1
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="BENCH_serve.json produced by this run")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--key", default="batched_fused")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get(
+                        "BENCH_REGRESSION_TOLERANCE", "0.25")))
+    args = ap.parse_args()
+    sys.exit(check(args.current, args.baseline, args.key, args.tolerance))

@@ -108,7 +108,6 @@ def pick_query_phrases(corpus, n, rng, mean_len=2.0, std_len=1.0,
     our ~13 MB synthetic scale they are often singletons, which turns
     relative error into a coin flip for EVERY sampling method.  The
     filter keeps the estimator regime comparable to the paper's."""
-    from repro.data.store import count_phrase_in_shard
     phrases = []
     shards = corpus.shards
     attempts = 0

@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import csv_row, text_setup
 
@@ -24,7 +23,7 @@ def _time(fn, *args, reps=20, warmup=3):
 def run(verbose=True):
     import jax.numpy as jnp
     from repro.core import lsh as lsh_mod
-    from repro.core.pv_dbow import PVDBOWConfig, corpus_pairs, train_pv_dbow
+    from repro.core.pv_dbow import corpus_pairs
     from repro.kernels.hamming import ops as hops
 
     setup = text_setup(tag="wiki")

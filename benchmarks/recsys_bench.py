@@ -6,7 +6,6 @@ precise (rate=1.0) execution, EmApprox vs SRCS.
 """
 from __future__ import annotations
 
-import time
 
 import numpy as np
 

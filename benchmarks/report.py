@@ -12,7 +12,7 @@ import argparse
 import glob
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict
 
 from benchmarks.roofline import (
     HBM_BW,

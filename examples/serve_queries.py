@@ -2,15 +2,18 @@
 
 Builds the offline index once, then serves a stream of mixed queries —
 aggregation, Boolean, ranked — through the *warm adaptive serving
-runtime*: queries arrive one by one at a ``BatchWindow`` frontend,
-which closes batches by deadline (low traffic keeps latency) or size
-(high traffic gets full shared-scan amortization); each closed window
-runs through the batched execution engine (``QueryBatch``) — one
-batched scoring pass, per-query pps sampling, one shared scan over the
-union of sampled shards — on a fault-tolerant executor whose thread
-pool stays warm across batches (with injected worker faults surviving
-via retries).  Accuracy is reported against precise answers computed
-with a rate-1.0 batch — itself a single shared scan over all shards.
+runtime*: queries arrive one by one at a ``BatchWindow`` frontend
+driven by the queueing-theory ``WindowController`` (each window opens
+with the deadline/size pair currently estimated to minimize p99
+sojourn; ``--static`` pins the fixed pair instead), with a bounded
+pending queue that sheds via ``Backpressure`` if the dispatcher
+saturates; each closed window runs through the batched execution
+engine (``QueryBatch``) — one batched scoring pass, per-query pps
+sampling, one shared scan over the union of sampled shards — on a
+fault-tolerant executor whose thread pool stays warm across batches
+(with injected worker faults surviving via retries).  Accuracy is
+reported against precise answers computed with a rate-1.0 batch —
+itself a single shared scan over all shards.
 
     PYTHONPATH=src python examples/serve_queries.py [--queries 48]
 """
@@ -36,6 +39,12 @@ def main():
                     help="mean inter-arrival gap of the synthetic "
                          "query stream (microseconds)")
     ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--static", action="store_true",
+                    help="pin the fixed (deadline, batch) pair instead "
+                         "of the adaptive window controller")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="pending-queue bound; submits shed with "
+                         "Backpressure beyond it (default 8x batch)")
     args = ap.parse_args()
 
     from repro.core.allocation import allocate_corpus
@@ -46,7 +55,8 @@ def main():
                                     precision_at_k, recall)
     from repro.data.corpus import SyntheticCorpusConfig, generate_text_corpus
     from repro.data.store import ShardedCorpus
-    from repro.runtime import BatchWindow, ShardTaskExecutor
+    from repro.runtime import (Backpressure, BatchWindow, ControllerConfig,
+                               ShardTaskExecutor, WindowController)
 
     print("== offline index build ==")
     ccfg = SyntheticCorpusConfig(n_docs=2400, vocab_size=4096, n_topics=16)
@@ -96,14 +106,23 @@ def main():
     print("== precise reference pass (rate 1.0, one shared scan) ==")
     precise = engine.execute(queries, 1.0)
 
+    controller = None
+    if not args.static:
+        controller = WindowController(ControllerConfig(
+            min_delay_s=1e-4, max_delay_s=args.window_ms / 1e3,
+            min_batch=1, max_batch=args.batch))
+    max_pending = args.max_pending or 8 * args.batch
+    mode = ("static window" if args.static
+            else "adaptive window (p99-sojourn controller)")
     print(f"== serving {args.queries} mixed queries at rate {args.rate} "
           f"through a {args.window_ms:.1f} ms / {args.batch}-query "
-          f"batch window ==")
+          f"{mode}, pending bound {max_pending} ==")
     # the window's rng is drawn from by the dispatcher thread while the
     # main thread draws arrival gaps — separate generators keep both
     # streams deterministic (numpy Generators are not thread-safe)
     window = BatchWindow(engine, args.rate, max_batch=args.batch,
                          max_delay_s=args.window_ms / 1e3,
+                         controller=controller, max_pending=max_pending,
                          rng=np.random.default_rng(1))
     arrival_rng = np.random.default_rng(2)
     done_at = {}
@@ -115,10 +134,20 @@ def main():
         return cb
 
     t_serve = time.perf_counter()
-    futs = []
+    futs, shed = [], 0
     for i, q in enumerate(queries):
         t_submit[i] = time.perf_counter()
-        fut = window.submit(q)
+        while True:
+            try:
+                fut = window.submit(q)
+                break
+            except Backpressure:
+                # a real frontend would divert to a replica; the
+                # example backs off and retries.  The original
+                # t_submit stands — every shed-and-wait penalty is
+                # part of the query's sojourn
+                shed += 1
+                time.sleep(args.window_ms / 1e3)
         fut.add_done_callback(on_done(i))
         futs.append(fut)
         if args.arrival_us > 0:
@@ -143,12 +172,25 @@ def main():
             acc[k].append(precision_at_k(r.doc_ids, ref.doc_ids, 10))
 
     ws = window.stats
+    sojourn = np.asarray([done_at[i] - t_submit[i]
+                          for i in range(len(queries))])
     print(f"   throughput: {len(queries)/elapsed:8.1f} queries/sec "
           f"({len(queries)} queries in {elapsed:.2f}s)")
+    print(f"   sojourn: p50 {np.percentile(sojourn, 50)*1e3:.2f} ms | "
+          f"p99 {np.percentile(sojourn, 99)*1e3:.2f} ms")
     print(f"   windows: {ws['batches']} "
           f"(by size {ws['closed_by_size']}, "
           f"by deadline {ws['closed_by_deadline']}, "
-          f"by flush {ws['closed_by_flush']})")
+          f"by flush {ws['closed_by_flush']}); "
+          f"shed by backpressure: {shed}")
+    if controller is not None and controller.current_plan is not None:
+        plan = controller.current_plan
+        scan = controller.scan_fraction
+        print(f"   controller: deadline {plan.delay_s*1e3:.2f} ms, "
+              f"batch {plan.max_batch}, est p99 {plan.est_p99_s*1e3:.2f} ms, "
+              f"utilization {plan.utilization:.2f}, "
+              f"arrival rate {plan.arrival_rate:.0f}/s"
+              + (f", scan share {scan:.0%}" if scan is not None else ""))
     print(f"   injected faults survived: {faults['injected']} "
           f"(executor retries: {executor.stats['retries']}; warm pool "
           f"rebuilds: {executor.stats['pool_rebuilds']} across "

@@ -26,7 +26,7 @@ import re
 import shutil
 import threading
 import uuid
-from typing import Any, Callable, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import numpy as np

@@ -7,7 +7,7 @@ exposes ``CONFIG`` (full-size) and ``smoke_config()`` (reduced, CPU-runnable).
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import List
 
 _ARCHS = [
     "smollm_360m",

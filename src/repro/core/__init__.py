@@ -13,6 +13,7 @@ from repro.core.lsh import LSHConfig, LSHIndex, pack_bits, hamming_similarity  #
 from repro.core.sampling import (  # noqa: F401
     SampleResult,
     pps_sample,
+    pps_sample_distinct,
     srcs_sample,
     ht_estimate,
 )

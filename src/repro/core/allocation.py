@@ -47,7 +47,8 @@ def spherical_kmeans(
 
     if cfg.use_kernel:
         from repro.kernels.kmeans import ops as kmeans_ops
-        assign_fn = lambda xx, cc: kmeans_ops.assign(xx, cc)
+        def assign_fn(xx, cc):
+            return kmeans_ops.assign(xx, cc)
     else:
         @jax.jit
         def assign_fn(xx, cc):

@@ -12,7 +12,6 @@ Pipeline (paper Fig. 2 a1-a5):
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import NamedTuple, Optional, Sequence
 

@@ -51,6 +51,7 @@ from repro.core.sampling import (
     SampleResult,
     ht_estimate,
     pps_sample,
+    pps_sample_distinct,
     similarity_probabilities,
     unique_shards,
 )
@@ -209,7 +210,14 @@ class QueryBatch:
             plan = [all_ids] * len(queries)
         else:
             rows = self._probability_rows(queries)
-            samples = [pps_sample(row, rate, rng) for row in rows]
+            # aggregation keeps the with-replacement multiset (the
+            # Hansen-Hurwitz estimator needs it); retrieval unions docs
+            # over the sample, so it draws distinct shards — same
+            # samplers, in the same query order, as the single-query
+            # entry points (pinned by the parity tests)
+            samples = [pps_sample(row, rate, rng) if q.kind == "count"
+                       else pps_sample_distinct(row, rate, rng)
+                       for q, row in zip(queries, rows)]
             plan = [unique_shards(s) for s in samples]
 
         if self.index is not None:

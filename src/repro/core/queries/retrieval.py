@@ -16,16 +16,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, NamedTuple, Optional, Sequence, Set, Tuple, Union
+from typing import List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.index import ApproxIndex
 from repro.core.sampling import (
     SampleResult,
-    pps_sample,
+    pps_sample_distinct,
     similarity_probabilities,
-    srcs_sample,
     unique_shards,
 )
 from repro.data.store import DocShard, ShardedCorpus
@@ -170,10 +169,17 @@ def boolean_query(
                               np.full(corpus.n_shards, 1.0 / corpus.n_shards), 1.0)
     elif method == "emapprox":
         sims = _expr_shard_similarity(expr, index)
-        sample = pps_sample(similarity_probabilities(sims), rate, rng)
+        sample = pps_sample_distinct(
+            similarity_probabilities(sims), rate, rng)
         distinct = unique_shards(sample)
     elif method == "srcs":
-        sample = srcs_sample(corpus.n_shards, rate, rng)
+        # NOTE: retrieval SRCS is uniform *without* replacement (the
+        # paper's with-replacement SRCS only matters for the HH
+        # aggregation estimator) so both methods read the same number
+        # of distinct shards at a given rate — the comparison stays a
+        # comparison of *which* shards, not how many
+        uniform = np.full(corpus.n_shards, 1.0 / corpus.n_shards)
+        sample = pps_sample_distinct(uniform, rate, rng)
         distinct = unique_shards(sample)
     else:
         raise ValueError(f"unknown method {method!r}")
@@ -288,10 +294,13 @@ def ranked_query(
                               np.full(corpus.n_shards, 1.0 / corpus.n_shards), 1.0)
     elif method == "emapprox":
         probs = index.shard_probabilities(query_words)
-        sample = pps_sample(probs, rate, rng)
+        sample = pps_sample_distinct(probs, rate, rng)
         distinct = unique_shards(sample)
     elif method == "srcs":
-        sample = srcs_sample(corpus.n_shards, rate, rng)
+        # same note as boolean_query: uniform without replacement so
+        # the srcs/emapprox comparison holds read budget fixed
+        uniform = np.full(corpus.n_shards, 1.0 / corpus.n_shards)
+        sample = pps_sample_distinct(uniform, rate, rng)
         distinct = unique_shards(sample)
     else:
         raise ValueError(f"unknown method {method!r}")

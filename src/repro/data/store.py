@@ -31,7 +31,7 @@ import dataclasses
 import json
 import os
 import tempfile
-from typing import Iterable, Iterator, List, Sequence
+from typing import Iterator, List, Sequence
 
 import numpy as np
 

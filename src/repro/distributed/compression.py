@@ -16,7 +16,6 @@ from __future__ import annotations
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.optimizer.quantized import q8_dequantize, q8_quantize
 

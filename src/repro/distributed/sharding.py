@@ -82,13 +82,6 @@ def set_rules(overrides: Rules):
             _local.rules = prev
 
 
-def _axes_in_mesh(mesh: Optional[Mesh]):
-    if mesh is None:
-        env = jax.sharding.get_abstract_mesh() if hasattr(jax.sharding, "get_abstract_mesh") else None
-        return None
-    return set(mesh.axis_names)
-
-
 def logical_to_mesh_spec(logical_axes: Tuple[Optional[str], ...],
                          mesh: Optional[Mesh] = None) -> P:
     """Map a tuple of logical axis names to a PartitionSpec, dropping
@@ -106,7 +99,8 @@ def logical_to_mesh_spec(logical_axes: Tuple[Optional[str], ...],
         if target is None:
             spec.append(None)
             continue
-        if isinstance(target, str):
+        multi = isinstance(target, tuple)
+        if not multi:
             target = (target,)
         present = tuple(t for t in target
                         if (mesh_axes is None or t in mesh_axes)
@@ -114,10 +108,13 @@ def logical_to_mesh_spec(logical_axes: Tuple[Optional[str], ...],
         used.update(present)
         if not present:
             spec.append(None)
-        elif len(present) == 1:
-            spec.append(present[0])
-        else:
+        elif multi:
+            # multi-axis rules keep tuple form even when the mesh drops
+            # all but one axis: ("pod","data") -> ("data",) — a sharded
+            # dim stays visibly distinct from a rule that named one axis
             spec.append(present)
+        else:
+            spec.append(present[0])
     return P(*spec)
 
 

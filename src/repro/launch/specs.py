@@ -7,7 +7,7 @@ are only ever exercised abstractly; smoke tests use reduced configs).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

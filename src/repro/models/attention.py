@@ -14,7 +14,6 @@ Design notes (TPU adaptation):
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import NamedTuple, Optional, Tuple
 
 import jax

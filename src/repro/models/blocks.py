@@ -7,7 +7,7 @@ axis and scans.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -91,7 +91,8 @@ def cross_defs(cfg) -> dict:
 
 def block_defs(cfg, kind: str) -> dict:
     """kind: dense | moe | ssm | hybrid | cross | encoder."""
-    norm = lambda: ParamDef((cfg.d_model,), ("d_model",), init="ones")
+    def norm():
+        return ParamDef((cfg.d_model,), ("d_model",), init="ones")
     if kind == "ssm":
         return {"norm": norm(), "ssm": ssm_defs(cfg)}
     if kind == "cross":

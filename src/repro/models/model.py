@@ -8,7 +8,6 @@ layer) so no gated-FLOP waste is introduced.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

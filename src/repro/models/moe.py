@@ -13,7 +13,6 @@ for a token, the other picks shards for a query (DESIGN.md Sec. 5).
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ so FSDP shards optimizer state too (ZeRO-style).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -76,7 +76,8 @@ def adamw_update(
     b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
     lr = cfg.lr * lr_scale
 
-    is_q8 = lambda x: isinstance(x, Q8State)
+    def is_q8(x):
+        return isinstance(x, Q8State)
 
     def upd(p, g, m_s, v_s):
         g = g.astype(jnp.float32) * clip_coef

@@ -1,2 +1,8 @@
+from repro.runtime.controller import (  # noqa: F401
+    Backpressure,
+    ControllerConfig,
+    WindowController,
+    WindowPlan,
+)
 from repro.runtime.executor import ShardTaskExecutor  # noqa: F401
 from repro.runtime.window import BatchWindow  # noqa: F401

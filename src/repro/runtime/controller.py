@@ -1,0 +1,338 @@
+"""Queueing-theory batch-window controller (serving-time autotuning).
+
+``BatchWindow``'s static (deadline, max_batch) pair is wrong at both
+ends of the load curve: at low traffic a lone query waits out the full
+deadline for a batch that never fills, and at high traffic a too-small
+window underfills the batched engine's amortization while a too-large
+one lets the single dispatcher saturate with no signal to callers.
+``WindowController`` closes the loop:
+
+  * **Arrival model** — an EWMA over inter-arrival gaps gives the
+    instantaneous arrival rate ``lambda``.  A second, slower EWMA of
+    squared gap deviations gives a burstiness hint (diagnostic only).
+  * **Service model** — per-batch observations ``(n, service_s)`` feed
+    exponentially-weighted first/second moments from which the batch
+    cost line ``s(n) = c0 + c1 * n`` is recovered (covariance over
+    variance; the same running-moments trick as Welford, but with
+    exponential forgetting so the model tracks warmup -> warm shifts).
+    ``c0`` is the per-window overhead the batch amortizes (planning,
+    dispatch, kernel launch), ``c1`` the marginal per-query cost.
+  * **Plan** — on every batch completion (and at least every
+    ``control_period_s``) the controller sweeps a small candidate grid
+    (geometric deadlines x doubling batch sizes, both clamped to
+    configured bounds) and picks the pair minimizing the estimated p99
+    sojourn of a query under the current ``lambda``.  Each candidate is
+    scored under the better of two regimes:
+
+    arrival-fed (windows open on an empty queue and fill from fresh
+    arrivals — the light/moderate-load regime):
+
+        fill   = (B - 1) / lambda          time for a window to fill
+        closes by size  if fill <= d  ->  n = B,           wait = fill
+        closes by deadline otherwise  ->  n = 1 + lambda*d, wait = d
+
+    queue-fed (a standing backlog stuffs every window to B the moment
+    it opens — scored only when the arrival-fed regime is unstable,
+    because that instability is precisely the condition under which a
+    backlog forms; crediting queue-fed batching at light load would
+    chase batches the queue can never supply):
+
+        n = B, wait = min(d, fill)
+
+    and in either regime:
+
+        s      = c0 + c1 * n               batch service time
+        rho    = lambda * s / n            dispatcher utilization
+        queue  = rho / (1 - rho) * s / 2   M/G/1-flavored mean wait
+        p99    ~= wait + TAIL_P99 * queue + s
+
+    (``TAIL_P99``: tail factor mapping the mean queue wait to a p99
+    estimate; see its definition for why it is lighter than the
+    exponential ln(100).)
+    ``rho >= 1`` in a regime marks it unstable (infinite sojourn); if
+    *every* candidate is unstable in *both* regimes the plan pins
+    (min deadline, max batch) — serve immediately, amortize maximally,
+    the backlog does the batching — and reports saturation.
+
+The qualitative behavior this buys (pinned by tests/test_controller.py):
+under light load the chosen deadline collapses toward ``min_delay_s``
+(a lone query's sojourn is ``d + s(1)``, so the optimizer shrinks
+``d``); under heavy load the chosen batch grows toward ``max_batch``
+(amortizing ``c0`` is the only way to keep ``rho < 1``).
+
+**Backpressure** — the dispatcher saturating is a *caller's* problem
+too: ``BatchWindow`` bounds its pending queue and sheds with the typed
+``Backpressure`` signal once the bound is hit, so upstream load
+balancers see a crisp, immediate reject instead of a silently growing
+sojourn.  ``Backpressure`` carries the queue depth and the controller's
+current utilization estimate for the caller's retry policy.
+
+All entry points take an explicit ``now`` timestamp (defaulting to
+``time.perf_counter()``) so tests drive synthetic clocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import List, Optional, Tuple
+
+# Tail factor mapping the mean queue wait to a p99 estimate.  A pure
+# exponential tail would give ln(100) ~ 4.6, but batch service here is
+# near-deterministic (one shared scan over a similar shard union every
+# window), so the M/D/1-flavored tail is far lighter; ln(10) keeps the
+# ordering pressure of the tail without making moderate utilization
+# look catastrophic (which drove the planner to long idle deadlines).
+TAIL_P99 = math.log(10.0)
+
+
+class Backpressure(RuntimeError):
+    """The serving window's pending queue is at its bound: the query was
+    shed, not enqueued.  Retry with jitter or divert to another replica.
+    ``depth`` is the queue depth at rejection; ``utilization`` the
+    controller's dispatcher-utilization estimate (>= 1.0 ~ saturated),
+    or None when the window runs without a controller."""
+
+    def __init__(self, depth: int, utilization: Optional[float] = None):
+        self.depth = depth
+        self.utilization = utilization
+        util = (f", utilization ~{utilization:.2f}"
+                if utilization is not None else "")
+        super().__init__(
+            f"batch window pending queue full ({depth} queued{util})")
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    """Bounds and gains for ``WindowController``."""
+    min_delay_s: float = 1e-4       # never close faster than dispatch cost
+    max_delay_s: float = 0.02       # latency ceiling at any load
+    min_batch: int = 1
+    max_batch: int = 128
+    control_period_s: float = 0.05  # re-plan cadence
+    arrival_alpha: float = 0.1      # EWMA gain for inter-arrival gaps
+    service_alpha: float = 0.2      # EWMA gain for batch-cost moments
+    n_delay_candidates: int = 8     # geometric grid resolution
+
+    def __post_init__(self):
+        if not (0 < self.min_delay_s <= self.max_delay_s):
+            raise ValueError(
+                f"need 0 < min_delay_s <= max_delay_s, got "
+                f"{self.min_delay_s} / {self.max_delay_s}")
+        if not (1 <= self.min_batch <= self.max_batch):
+            raise ValueError(
+                f"need 1 <= min_batch <= max_batch, got "
+                f"{self.min_batch} / {self.max_batch}")
+        for name in ("arrival_alpha", "service_alpha"):
+            a = getattr(self, name)
+            if not (0 < a <= 1):
+                raise ValueError(f"{name} must be in (0, 1], got {a}")
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowPlan:
+    """One control decision: the (deadline, batch) pair to serve with,
+    plus the estimates that chose it (surfaced in stats/benchmarks)."""
+    delay_s: float
+    max_batch: int
+    est_p99_s: float            # estimated p99 sojourn under the plan
+    utilization: float          # rho at the chosen candidate
+    arrival_rate: float         # lambda the plan was computed for
+    saturated: bool             # every candidate had rho >= 1
+
+
+class WindowController:
+    """Picks (deadline, max_batch) minimizing estimated p99 sojourn.
+
+    Not thread-safe by itself; ``BatchWindow`` serializes calls under
+    its own condition lock (producers call ``observe_arrival`` /
+    ``window_params`` while holding it, the dispatcher calls
+    ``observe_batch``)."""
+
+    def __init__(self, config: Optional[ControllerConfig] = None, *,
+                 seed_service_s: float = 1e-3,
+                 seed_per_item_s: float = 1e-4):
+        self.config = config or ControllerConfig()
+        self._last_arrival: Optional[float] = None
+        self._mean_gap: Optional[float] = None   # EWMA inter-arrival gap
+        self._gap_var: float = 0.0               # EWMA squared deviation
+        # exponentially-forgotten first/second moments of (n, s) batch
+        # observations; seeded with a benign 1-query prior so the first
+        # plan is sane before any batch has completed
+        self._m_n = 1.0
+        self._m_s = float(seed_service_s)
+        self._m_nn = 1.0
+        self._m_ns = float(seed_service_s)
+        self._seed_per_item = float(seed_per_item_s)
+        self._n_batches = 0
+        self._scan_s: Optional[float] = None     # executor telemetry EWMA
+        self._plan: Optional[WindowPlan] = None
+        self._plan_at: float = -math.inf
+
+    # ------------------------------------------------------------------
+    # observations
+    # ------------------------------------------------------------------
+    def observe_arrival(self, now: Optional[float] = None) -> None:
+        """One query arrived at ``now``; update the arrival-rate EWMA."""
+        now = time.perf_counter() if now is None else now
+        if self._last_arrival is not None:
+            gap = max(now - self._last_arrival, 1e-9)
+            a = self.config.arrival_alpha
+            if self._mean_gap is None:
+                self._mean_gap = gap
+            else:
+                dev = gap - self._mean_gap
+                self._mean_gap += a * dev
+                self._gap_var += a * (dev * dev - self._gap_var)
+        self._last_arrival = now
+
+    def observe_batch(self, n: int, service_s: float,
+                      scan_s: Optional[float] = None) -> None:
+        """One window of ``n`` queries took ``service_s`` to execute.
+        ``scan_s`` is the executor's per-job service telemetry (the
+        shared-scan share of the batch; see
+        ``ShardTaskExecutor.last_job``) — tracked so saturation can be
+        attributed to scan work vs engine overhead."""
+        if n < 1 or service_s < 0:
+            return
+        a = self.config.service_alpha
+        self._m_n += a * (n - self._m_n)
+        self._m_s += a * (service_s - self._m_s)
+        self._m_nn += a * (n * n - self._m_nn)
+        self._m_ns += a * (n * service_s - self._m_ns)
+        if scan_s is not None:
+            self._scan_s = (scan_s if self._scan_s is None else
+                            self._scan_s + a * (scan_s - self._scan_s))
+        self._n_batches += 1
+        # a fresh service observation invalidates the cached plan: one
+        # batch against a cold (seeded) cost model can shift the
+        # estimate by 10x, and replanning is 72 multiply-adds
+        self._plan_at = -math.inf
+
+    # ------------------------------------------------------------------
+    # models
+    # ------------------------------------------------------------------
+    @property
+    def arrival_rate(self) -> float:
+        """Queries/sec (EWMA); 0.0 until two arrivals have been seen."""
+        if self._mean_gap is None or self._mean_gap <= 0:
+            return 0.0
+        return 1.0 / self._mean_gap
+
+    def service_model(self) -> Tuple[float, float]:
+        """``(c0, c1)`` of the batch cost line ``s(n) = c0 + c1 * n``.
+
+        The covariance fit is only trusted once the observed batch
+        sizes genuinely spread (var >= 0.25, i.e. more than jitter
+        around one size): a fit over near-identical sizes amplifies
+        service-time noise into wild marginal costs, and one bad
+        transient ``c1`` is enough to misplan a long idle deadline
+        straight into the sojourn tail."""
+        var_n = self._m_nn - self._m_n * self._m_n
+        cov = self._m_ns - self._m_n * self._m_s
+        if var_n >= 0.25 and cov > 0:
+            c1 = min(cov / var_n, self._m_s / max(self._m_n, 1.0))
+            return max(self._m_s - c1 * self._m_n, 0.0), c1
+        # batch sizes (nearly) constant so far: split the mean cost
+        # with the seeded marginal estimate
+        c1 = min(self._seed_per_item, self._m_s / max(self._m_n, 1.0))
+        return max(self._m_s - c1 * self._m_n, 0.0), c1
+
+    @property
+    def scan_fraction(self) -> Optional[float]:
+        """Share of batch service spent in the executor's shared scan
+        (None until executor telemetry has been observed)."""
+        if self._scan_s is None or self._m_s <= 0:
+            return None
+        return min(self._scan_s / self._m_s, 1.0)
+
+    # ------------------------------------------------------------------
+    # planning
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _regime_p99(lam: float, n: float, wait: float,
+                    c0: float, c1: float) -> Tuple[float, float]:
+        s = c0 + c1 * n
+        rho = lam * s / max(n, 1.0)
+        if rho >= 1.0:
+            return math.inf, rho
+        queue = rho / (1.0 - rho) * s / 2.0
+        return wait + TAIL_P99 * queue + s, rho
+
+    def _estimate_p99(self, lam: float, d: float, batch: int,
+                      c0: float, c1: float) -> Tuple[float, float]:
+        """(estimated p99 sojourn, utilization) for one candidate: the
+        better of the arrival-fed and queue-fed regimes (see module
+        docstring)."""
+        if lam <= 0:
+            # no traffic: a lone query waits the full deadline
+            return d + c0 + c1, 0.0
+        fill = (batch - 1) / lam
+        if fill <= d:
+            n, wait = float(batch), fill
+        else:
+            n, wait = min(1.0 + lam * d, float(batch)), d
+        arrival = self._regime_p99(lam, n, wait, c0, c1)
+        if not math.isinf(arrival[0]):
+            return arrival
+        # arrival-fed service can't keep up, so a backlog forms and
+        # feeds full windows; the deadline only delays dispatch
+        return self._regime_p99(lam, float(batch), min(d, fill), c0, c1)
+
+    def _candidates(self) -> Tuple[List[float], List[int]]:
+        cfg = self.config
+        k = max(cfg.n_delay_candidates, 2)
+        ratio = cfg.max_delay_s / cfg.min_delay_s
+        delays = [cfg.min_delay_s * ratio ** (i / (k - 1)) for i in range(k)]
+        batches, b = [], cfg.min_batch
+        while b < cfg.max_batch:
+            batches.append(b)
+            b *= 2
+        batches.append(cfg.max_batch)
+        return delays, batches
+
+    def plan(self, now: Optional[float] = None) -> WindowPlan:
+        """Recompute the plan unconditionally (tests and ``window_params``
+        call this; serving code wants ``window_params``)."""
+        now = time.perf_counter() if now is None else now
+        lam = self.arrival_rate
+        c0, c1 = self.service_model()
+        delays, batches = self._candidates()
+        best: Optional[Tuple[float, float, float, int]] = None
+        for d in delays:
+            for b in batches:
+                p99, rho = self._estimate_p99(lam, d, b, c0, c1)
+                key = (p99, d, b)
+                if best is None or key < (best[0], best[2], best[3]):
+                    best = (p99, rho, d, b)
+        p99, rho, d, b = best
+        saturated = math.isinf(p99)
+        if saturated:
+            # No stable candidate: under overload the backlog itself
+            # forms the batches (a full queue size-closes the window
+            # instantly), so waiting out a long deadline only adds
+            # latency — serve immediately with the largest batch and
+            # let backpressure shed the excess.
+            d, b = self.config.min_delay_s, self.config.max_batch
+            _, rho = self._estimate_p99(lam, d, b, c0, c1)
+        self._plan = WindowPlan(d, b, p99, rho, lam, saturated)
+        self._plan_at = now
+        return self._plan
+
+    def window_params(self, now: Optional[float] = None
+                      ) -> Tuple[float, int]:
+        """(max_delay_s, max_batch) to serve the next window with;
+        replans at most every ``control_period_s``."""
+        now = time.perf_counter() if now is None else now
+        if (self._plan is None
+                or now - self._plan_at >= self.config.control_period_s):
+            self.plan(now)
+        return self._plan.delay_s, self._plan.max_batch
+
+    @property
+    def current_plan(self) -> Optional[WindowPlan]:
+        return self._plan
+
+    @property
+    def utilization(self) -> Optional[float]:
+        return self._plan.utilization if self._plan is not None else None

@@ -41,7 +41,7 @@ import queue
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, Dict, Iterable, Optional, Sequence
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import numpy as np
 
@@ -89,6 +89,11 @@ class ShardTaskExecutor:
         self.gil_floor_s = gil_floor_s
         self.stats: Dict[str, int] = {"retries": 0, "speculative": 0,
                                       "jobs": 0, "pool_rebuilds": 0}
+        # per-job service-time telemetry for the last completed job —
+        # the window controller reads this to attribute batch cost to
+        # the shared scan (wall_s) vs engine overhead; see
+        # runtime/controller.WindowController.observe_batch
+        self.last_job: Optional[Dict[str, float]] = None
         self._pool: Optional[ThreadPoolExecutor] = None
         self._pool_size = 0
         self._pool_lock = threading.Lock()
@@ -182,6 +187,7 @@ class ShardTaskExecutor:
         fn: Callable[[Any], Any],
     ) -> Dict[int, Any]:
         ids = [int(s) for s in shard_ids]
+        t_job = time.perf_counter()
         results: Dict[int, Any] = {}
         attempts: Dict[int, int] = {i: 0 for i in ids}
         lock = threading.Lock()
@@ -287,10 +293,16 @@ class ShardTaskExecutor:
         missing = [s for s in ids if s not in results]
         if missing:
             raise ShardTaskError(f"shards never completed: {missing}")
+        median_task = float(np.median(durations)) if durations else 0.0
         if durations:
             # feeds adaptive granularity scaling for the next job
-            self._median_task_s = float(np.median(durations))
+            self._median_task_s = median_task
         self.stats["jobs"] += 1
+        self.last_job = {
+            "wall_s": time.perf_counter() - t_job,
+            "tasks": float(len(ids)),
+            "median_task_s": median_task,
+        }
         return results
 
     def map_shard_batch(

@@ -21,6 +21,19 @@ The win: low-traffic periods keep latency (a lone query waits at most
 the deadline, not for a full batch), high-traffic periods batch up to
 ``max_batch`` and inherit the batched engine's ~6x throughput (see
 BENCH_serve.json's ``windowed`` row).
+
+Two optional control loops close the remaining gaps:
+
+  * ``controller=WindowController(...)`` replaces the static pair with
+    the queueing-theory autotuner in ``runtime/controller.py``: every
+    window opens with the (deadline, size) the controller currently
+    estimates minimizes p99 sojourn, fed by the window's own arrival /
+    batch-cost observations (``max_delay_s`` / ``max_batch`` then only
+    apply when the controller is absent).
+  * ``max_pending=N`` bounds the pending queue: once N queries sit
+    unserved, ``submit`` sheds with the typed ``Backpressure`` signal
+    instead of letting sojourn grow without bound behind a saturated
+    dispatcher.
 """
 from __future__ import annotations
 
@@ -30,6 +43,8 @@ from concurrent.futures import Future
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.runtime.controller import Backpressure, WindowController
 
 
 class BatchWindow:
@@ -45,15 +60,21 @@ class BatchWindow:
         max_batch: int = 32,
         max_delay_s: float = 0.002,
         rng: Optional[np.random.Generator] = None,
+        controller: Optional[WindowController] = None,
+        max_pending: Optional[int] = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_delay_s < 0:
             raise ValueError(f"max_delay_s must be >= 0, got {max_delay_s}")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self.engine = engine
         self.rate = rate
         self.max_batch = int(max_batch)
         self.max_delay_s = float(max_delay_s)
+        self.controller = controller
+        self.max_pending = max_pending
         self._rng = rng or np.random.default_rng(0)
         self._wake = threading.Condition()
         self._pending: List[Tuple[Any, Future]] = []
@@ -61,7 +82,7 @@ class BatchWindow:
         self._flush = False
         self._closed = False
         self.stats: Dict[str, int] = {
-            "batches": 0, "served": 0, "cancelled": 0,
+            "batches": 0, "served": 0, "cancelled": 0, "shed": 0,
             "closed_by_size": 0, "closed_by_deadline": 0,
             "closed_by_flush": 0,
         }
@@ -74,14 +95,31 @@ class BatchWindow:
     # ------------------------------------------------------------------
     def submit(self, query) -> "Future":
         """Enqueue one query; the future resolves to the same result
-        object ``QueryBatch.execute`` would return for it."""
+        object ``QueryBatch.execute`` would return for it.
+
+        Raises ``Backpressure`` (the query is *not* enqueued) when
+        ``max_pending`` queries already wait — the dispatcher is
+        saturated and callers must shed or retry elsewhere."""
         fut: Future = Future()
         with self._wake:
+            # timestamp under the lock: the controller's EWMA needs
+            # monotone arrival times, and two producers reading the
+            # clock before racing for the lock can deliver them
+            # out of order
+            now = time.perf_counter()
             if self._closed:
                 raise RuntimeError("BatchWindow is closed")
+            if (self.max_pending is not None
+                    and len(self._pending) >= self.max_pending):
+                self.stats["shed"] += 1
+                util = (self.controller.utilization
+                        if self.controller is not None else None)
+                raise Backpressure(len(self._pending), util)
+            if self.controller is not None:
+                self.controller.observe_arrival(now)
             self._pending.append((query, fut))
             if self._first_arrival is None:
-                self._first_arrival = time.perf_counter()
+                self._first_arrival = now
             self._wake.notify_all()
         return fut
 
@@ -117,17 +155,23 @@ class BatchWindow:
                     self._wake.wait()
                 if not self._pending and self._closed:
                     return
-                # a window is open: wait for size, flush, or deadline
-                deadline = self._first_arrival + self.max_delay_s
-                while (len(self._pending) < self.max_batch
+                # a window is open: its (deadline, size) pair is fixed
+                # at open time — static, or the controller's current
+                # p99-sojourn-minimizing plan
+                if self.controller is not None:
+                    delay_s, max_batch = self.controller.window_params()
+                else:
+                    delay_s, max_batch = self.max_delay_s, self.max_batch
+                deadline = self._first_arrival + delay_s
+                while (len(self._pending) < max_batch
                        and not self._flush and not self._closed):
                     remaining = deadline - time.perf_counter()
                     if remaining <= 0:
                         break
                     self._wake.wait(timeout=remaining)
-                batch = self._pending[: self.max_batch]
-                del self._pending[: self.max_batch]
-                if len(batch) >= self.max_batch:
+                batch = self._pending[: max_batch]
+                del self._pending[: max_batch]
+                if len(batch) >= max_batch:
                     reason = "size"
                 elif self._flush or self._closed:
                     reason = "flush"
@@ -152,8 +196,10 @@ class BatchWindow:
         claimed = [(q, f) for q, f in batch
                    if f.set_running_or_notify_cancel()]
         dropped = len(batch) - len(claimed)
+        service_s = None
         if claimed:
             queries = [q for q, _ in claimed]
+            t0 = time.perf_counter()
             try:
                 results = self.engine.execute(queries, self.rate,
                                               rng=self._rng)
@@ -161,6 +207,7 @@ class BatchWindow:
                 for _, fut in claimed:
                     fut.set_exception(exc)
             else:
+                service_s = time.perf_counter() - t0
                 for (_, fut), res in zip(claimed, results):
                     fut.set_result(res)
         with self._wake:
@@ -170,3 +217,11 @@ class BatchWindow:
             self.stats["batches"] += 1
             self.stats["served"] += len(claimed)
             self.stats[f"closed_by_{reason}"] += 1
+            if self.controller is not None and service_s is not None:
+                # the executor's per-job telemetry attributes the batch
+                # cost: scan_s is the shared-scan share of service_s
+                executor = getattr(self.engine, "executor", None)
+                job = getattr(executor, "last_job", None)
+                scan_s = job["wall_s"] if job else None
+                self.controller.observe_batch(len(claimed), service_s,
+                                              scan_s)

@@ -1,0 +1,313 @@
+"""WindowController: deterministic synthetic arrival/service traces
+(steady-light, steady-heavy, ramp, bursty) pinning the qualitative
+control behavior — the window shrinks under light load, grows under
+heavy load, pins (min delay, max batch) at saturation — plus service
+model recovery, plan caching, and BatchWindow backpressure at the
+pending-queue bound."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.runtime import (
+    Backpressure,
+    BatchWindow,
+    ControllerConfig,
+    WindowController,
+)
+
+CFG = ControllerConfig(min_delay_s=1e-4, max_delay_s=0.02,
+                       min_batch=1, max_batch=128)
+
+
+def _drive(controller, gaps_s, batches=(), t0=0.0):
+    """Feed a deterministic trace: arrivals separated by ``gaps_s``,
+    then ``batches`` = (n, service_s) observations.  Returns the final
+    synthetic timestamp."""
+    t = t0
+    controller.observe_arrival(t)
+    for g in gaps_s:
+        t += g
+        controller.observe_arrival(t)
+    for n, s in batches:
+        controller.observe_batch(n, s)
+    return t
+
+
+def _steady(controller, gap_s, n_arrivals=300, **kw):
+    return _drive(controller, [gap_s] * n_arrivals, **kw)
+
+
+# ----------------------------------------------------------------------
+# control behavior on synthetic traces
+# ----------------------------------------------------------------------
+def test_light_load_shrinks_window():
+    """Steady trickle (20 qps, 1 ms singles): waiting out a deadline
+    buys nothing, so the plan collapses to serve-immediately."""
+    c = WindowController(CFG)
+    t = _steady(c, 0.05, batches=[(1, 1e-3)] * 20)
+    plan = c.plan(t)
+    assert plan.max_batch == CFG.min_batch
+    assert plan.delay_s == CFG.min_delay_s
+    assert not plan.saturated
+    assert plan.utilization < 0.1
+
+
+def test_heavy_load_grows_window():
+    """Steady 10k qps against a 0.5 ms + 50 us/query engine: only
+    amortizing the per-window overhead keeps the dispatcher stable, so
+    the chosen batch grows well past the light-load plan."""
+    light = WindowController(CFG)
+    t_l = _steady(light, 0.05, batches=[(1, 1e-3)] * 20)
+    heavy = WindowController(CFG)
+    t_h = _steady(heavy, 1e-4,
+                  batches=[(n, 5e-4 + 5e-5 * n)
+                           for n in (8, 16, 32, 64, 16, 8, 64, 32)] * 3)
+    lp, hp = light.plan(t_l), heavy.plan(t_h)
+    assert hp.max_batch > lp.max_batch
+    assert hp.max_batch >= 8
+    assert not hp.saturated
+    assert 0.0 < hp.utilization < 1.0
+    # and the heavy plan's window is still bounded by the config
+    assert hp.max_batch <= CFG.max_batch
+    assert CFG.min_delay_s <= hp.delay_s <= CFG.max_delay_s
+
+
+def test_ramp_tracks_load_up_and_down():
+    """Arrival gaps ramp 10 ms -> 0.1 ms -> 10 ms; the chosen batch
+    must follow the load up and come back down."""
+    c = WindowController(CFG)
+    service = [(n, 5e-4 + 5e-5 * n) for n in (4, 8, 16, 32)] * 2
+    t = _drive(c, np.geomspace(1e-2, 1e-4, 150), batches=service)
+    mid = c.plan(t)
+    t = _drive(c, np.geomspace(1e-4, 1e-2, 300), batches=service, t0=t)
+    end = c.plan(t)
+    start = WindowController(CFG)
+    t_s = _steady(start, 1e-2, batches=service)
+    assert mid.max_batch > start.plan(t_s).max_batch   # ramped up
+    assert end.max_batch < mid.max_batch               # and back down
+    assert end.delay_s <= mid.delay_s or end.max_batch == CFG.min_batch
+
+
+def test_bursty_trace_stays_stable_and_bounded():
+    """Bursts of 30 arrivals at 0.2 ms separated by 200 ms idle: the
+    EWMA rate must land strictly between the burst and idle extremes
+    and every plan must respect the configured bounds."""
+    c = WindowController(CFG)
+    t = 0.0
+    for _ in range(20):
+        t = _drive(c, [2e-4] * 30, t0=t)
+        t += 0.2
+        c.observe_batch(16, 2e-3)
+    rate = c.arrival_rate
+    assert 1.0 / 0.2 < rate < 1.0 / 2e-4
+    plan = c.plan(t)
+    assert CFG.min_batch <= plan.max_batch <= CFG.max_batch
+    assert CFG.min_delay_s <= plan.delay_s <= CFG.max_delay_s
+
+
+def test_saturation_pins_min_delay_max_batch():
+    """100k qps against a 10 ms + 1 ms/query engine: no candidate is
+    stable, so the plan serves immediately at max amortization and
+    flags saturation (backpressure's cue)."""
+    c = WindowController(CFG)
+    t = _steady(c, 1e-5, batches=[(n, 1e-2 + 1e-3 * n)
+                                  for n in (8, 32, 128)] * 3)
+    plan = c.plan(t)
+    assert plan.saturated
+    assert plan.max_batch == CFG.max_batch
+    assert plan.delay_s == CFG.min_delay_s
+    assert plan.utilization >= 1.0
+
+
+# ----------------------------------------------------------------------
+# models
+# ----------------------------------------------------------------------
+def test_arrival_rate_ewma():
+    c = WindowController(CFG)
+    assert c.arrival_rate == 0.0          # no arrivals yet
+    c.observe_arrival(0.0)
+    assert c.arrival_rate == 0.0          # one arrival: no gap yet
+    _steady(c, 0.01, n_arrivals=200)
+    assert c.arrival_rate == pytest.approx(100.0, rel=0.05)
+
+
+def test_service_model_recovers_cost_line():
+    c = WindowController(CFG)
+    for _ in range(40):
+        for n in (1, 2, 4, 8, 16, 32):
+            c.observe_batch(n, 2e-3 + 1e-4 * n)
+    c0, c1 = c.service_model()
+    assert c0 == pytest.approx(2e-3, rel=0.15)
+    assert c1 == pytest.approx(1e-4, rel=0.15)
+
+
+def test_service_model_degenerate_sizes():
+    """All batches the same size: the covariance fit is undefined; the
+    model must still return a finite, non-negative split."""
+    c = WindowController(CFG)
+    for _ in range(30):
+        c.observe_batch(8, 4e-3)
+    c0, c1 = c.service_model()
+    assert c0 >= 0.0 and c1 >= 0.0
+    assert c0 + 8 * c1 == pytest.approx(4e-3, rel=0.1)
+
+
+def test_plan_cached_until_period_or_batch():
+    c = WindowController(CFG)
+    _steady(c, 1e-3, t0=0.0)
+    d1, b1 = c.window_params(now=1000.0)
+    assert c.current_plan is not None
+    plan_obj = c.current_plan
+    # within the control period: cached object returned
+    c.window_params(now=1000.0 + CFG.control_period_s / 2)
+    assert c.current_plan is plan_obj
+    # a batch observation invalidates the cache immediately
+    c.observe_batch(4, 1e-3)
+    c.window_params(now=1000.0 + CFG.control_period_s / 2)
+    assert c.current_plan is not plan_obj
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        ControllerConfig(min_delay_s=0.01, max_delay_s=0.001)
+    with pytest.raises(ValueError):
+        ControllerConfig(min_batch=8, max_batch=4)
+    with pytest.raises(ValueError):
+        ControllerConfig(arrival_alpha=0.0)
+    with pytest.raises(ValueError):
+        ControllerConfig(service_alpha=1.5)
+
+
+# ----------------------------------------------------------------------
+# BatchWindow integration: controller params + backpressure
+# ----------------------------------------------------------------------
+class _GatedEngine:
+    """Blocks inside execute() until released — deterministic way to
+    hold the dispatcher busy while the pending queue fills."""
+
+    def __init__(self):
+        self.started = threading.Event()
+        self.release = threading.Event()
+        self.batches = []
+        self._lock = threading.Lock()
+
+    def execute(self, queries, rate, rng=None):
+        self.started.set()
+        assert self.release.wait(timeout=10)
+        with self._lock:
+            self.batches.append(list(queries))
+        return [("done", q) for q in queries]
+
+
+class _FixedController(WindowController):
+    """Controller stub pinning window_params to a fixed pair while
+    recording the observations BatchWindow feeds it."""
+
+    def __init__(self, delay_s, max_batch):
+        super().__init__(CFG)
+        self._fixed = (delay_s, max_batch)
+        self.arrivals = 0
+        self.batches = []
+
+    def window_params(self, now=None):
+        return self._fixed
+
+    def observe_arrival(self, now=None):
+        self.arrivals += 1
+        super().observe_arrival(now)
+
+    def observe_batch(self, n, service_s, scan_s=None):
+        self.batches.append((n, service_s, scan_s))
+        super().observe_batch(n, service_s, scan_s)
+
+
+def test_backpressure_at_queue_bound():
+    eng = _GatedEngine()
+    win = BatchWindow(eng, 1.0, max_batch=1, max_delay_s=1e-4,
+                      max_pending=3)
+    first = win.submit("busy")           # claimed by the dispatcher
+    assert eng.started.wait(timeout=10)
+    queued = [win.submit(i) for i in range(3)]   # fills the bound
+    with pytest.raises(Backpressure) as exc:
+        win.submit("shed")
+    assert exc.value.depth == 3
+    assert win.stats["shed"] == 1
+    eng.release.set()
+    assert first.result(timeout=10)[1] == "busy"
+    for f in queued:                      # queued work still completes
+        assert f.result(timeout=10)[0] == "done"
+    win.submit("after-drain").result(timeout=10)  # bound frees up
+    win.close()
+    assert win.stats["served"] == 5
+
+
+def test_window_honors_controller_params_and_feeds_it():
+    ctrl = _FixedController(delay_s=10.0, max_batch=2)
+    eng = _GatedEngine()
+    eng.release.set()                     # engine never blocks
+    # static args say (100, 10 s) — the controller must override both
+    win = BatchWindow(eng, 1.0, max_batch=100, max_delay_s=10.0,
+                      controller=ctrl)
+    futs = [win.submit(i) for i in range(6)]
+    for f in futs:
+        assert f.result(timeout=10)[0] == "done"
+    win.close()
+    assert all(len(b) <= 2 for b in eng.batches)
+    assert win.stats["closed_by_size"] >= 2
+    assert ctrl.arrivals == 6
+    assert len(ctrl.batches) == win.stats["batches"]
+    for n, service_s, _scan in ctrl.batches:
+        assert 1 <= n <= 2
+        assert service_s >= 0.0
+
+
+def test_backpressure_carries_utilization():
+    ctrl = _FixedController(delay_s=10.0, max_batch=1)
+    _steady(ctrl, 1e-5, batches=[(1, 1e-2)] * 5)
+    ctrl.plan(10.0)
+    eng = _GatedEngine()
+    win = BatchWindow(eng, 1.0, max_batch=1, controller=ctrl,
+                      max_pending=1)
+    win.submit("busy")
+    assert eng.started.wait(timeout=10)
+    win.submit("queued")
+    with pytest.raises(Backpressure) as exc:
+        win.submit("shed")
+    assert exc.value.utilization is not None
+    assert exc.value.utilization >= 1.0
+    eng.release.set()
+    win.close()
+
+
+def test_adaptive_window_end_to_end_under_load():
+    """Real controller, real (fast) engine: a burst of 60 queries must
+    drain, windows stay within the controller's bounds, and the
+    controller ends up with a live arrival-rate estimate."""
+
+    class _FastEngine:
+        def __init__(self):
+            self.batches = []
+            self._lock = threading.Lock()
+
+        def execute(self, queries, rate, rng=None):
+            time.sleep(2e-4)
+            with self._lock:
+                self.batches.append(len(queries))
+            return [("done", q) for q in queries]
+
+    cfg = ControllerConfig(min_delay_s=1e-4, max_delay_s=5e-3,
+                           min_batch=1, max_batch=16,
+                           control_period_s=1e-3)
+    ctrl = WindowController(cfg)
+    eng = _FastEngine()
+    win = BatchWindow(eng, 1.0, controller=ctrl)
+    futs = [win.submit(i) for i in range(60)]
+    for f in futs:
+        assert f.result(timeout=30)[0] == "done"
+    win.close()
+    assert sum(eng.batches) == 60
+    assert all(1 <= n <= 16 for n in eng.batches)
+    assert ctrl.arrival_rate > 0.0
+    assert ctrl.current_plan is not None

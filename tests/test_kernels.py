@@ -7,7 +7,6 @@ import pytest
 
 from repro.kernels.asym import ops as aops
 from repro.kernels.asym import ref as aref
-from repro.kernels.hamming import kernel as hk
 from repro.kernels.hamming import ops as hops
 from repro.kernels.hamming import ref as href
 from repro.kernels.kmeans import ops as kops

@@ -1,7 +1,6 @@
 """LSH properties: packing roundtrip, cosine preservation, asym scoring."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_shim import given, settings, st
 
 from repro.core.lsh import (

@@ -1,11 +1,9 @@
 """Query-layer behaviour over the shared small corpus + index."""
 import numpy as np
-import pytest
 
 from repro.core.queries.aggregation import phrase_count_query, precise_phrase_count
 from repro.core.queries.recommend import mse as rec_mse, recommend_query
 from repro.core.queries.retrieval import (
-    BoolExpr,
     boolean_query,
     parse_boolean,
     precision_at_k,

@@ -205,7 +205,6 @@ def test_q8_roundtrip_error_bounded(seed, n):
     x = rng.normal(size=n).astype(np.float32) * rng.uniform(0.01, 100)
     q = q8_quantize(x)
     back = np.asarray(q8_dequantize(q, x.shape))
-    blocks = np.array_split(np.abs(x), range(256, n, 256))
     # per-block error <= absmax/254 (half a code)
     err = np.abs(back - x)
     assert err.max() <= np.abs(x).max() / 127.0 + 1e-6

@@ -69,7 +69,6 @@ def test_mean_estimate_ratio():
     sums = rng.random(30) * 100
     counts = np.maximum(rng.poisson(20, 30), 1).astype(float)
     true_mean = sums.sum() / counts.sum()
-    phi = np.full(30, 1 / 30)
     vals = []
     for _ in range(200):
         s = srcs_sample(30, 0.4, rng)

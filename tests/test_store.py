@@ -1,6 +1,5 @@
 """Document store: phrase counting oracle, reallocation, boundaries."""
 import numpy as np
-import pytest
 from _hypothesis_shim import given, settings, st
 
 from repro.data.store import (

@@ -4,7 +4,6 @@ end-to-end window -> QueryBatch -> warm executor path."""
 import threading
 import time
 
-import numpy as np
 import pytest
 
 from repro.runtime import BatchWindow, ShardTaskExecutor
