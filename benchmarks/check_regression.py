@@ -1,12 +1,16 @@
 """Serving-bench regression gate (the CI serve-smoke floor).
 
 Compares a freshly produced ``BENCH_serve.json`` against the committed
-baseline and fails (exit 1) when the ``batched_fused`` throughput drops
-more than ``--tolerance`` (default 25%) below it.  The wide tolerance
+baseline and fails (exit 1) when any floored row's throughput drops
+more than ``--tolerance`` (default 25%) below it.  Two rows are
+floored: ``batched_fused`` (the single-host fused batched path) and
+``batched_hosts2`` (the simulated 2-host placement path — locality
+split, per-host shared scans, cross-host gather).  The wide tolerance
 absorbs runner-to-runner CPU variance while still catching the real
 regressions this gate exists for: a serialization point sneaking back
 into the batched scoring path, postings caches being rebuilt per batch,
-or the fused reduction silently falling back to per-query execution.
+the fused reduction silently falling back to per-query execution, or
+the placement layer paying a cross-host penalty on local data.
 
   PYTHONPATH=src python -m benchmarks.check_regression /tmp/bench.json
 
@@ -24,19 +28,17 @@ import sys
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
                                 "serve_smoke.json")
+DEFAULT_KEYS = "batched_fused,batched_hosts2"
 
 
-def check(current_path: str, baseline_path: str = DEFAULT_BASELINE,
-          key: str = "batched_fused", tolerance: float = 0.25) -> int:
-    with open(current_path) as f:
-        current = json.load(f)
-    with open(baseline_path) as f:
-        baseline = json.load(f)
+def check_key(current: dict, baseline: dict, key: str,
+              tolerance: float, current_path: str,
+              baseline_path: str) -> int:
     try:
         cur_qps = float(current[key]["qps"])
     except KeyError:
         print(f"FAIL: {current_path} has no '{key}' row — the serving "
-              f"bench did not exercise the fused batched path")
+              f"bench did not exercise that path")
         return 1
     try:
         base_qps = float(baseline[key]["qps"])
@@ -45,20 +47,34 @@ def check(current_path: str, baseline_path: str = DEFAULT_BASELINE,
               f"refresh it from a full smoke run")
         return 1
     floor = (1.0 - tolerance) * base_qps
-    verdict = "OK" if cur_qps >= floor else "FAIL"
-    print(f"{verdict}: {key} {cur_qps:.1f} q/s vs baseline "
-          f"{base_qps:.1f} q/s (floor {floor:.1f}, "
+    ok = cur_qps >= floor
+    print(f"{'OK' if ok else 'FAIL'}: {key} {cur_qps:.1f} q/s vs "
+          f"baseline {base_qps:.1f} q/s (floor {floor:.1f}, "
           f"tolerance {tolerance:.0%})")
-    return 0 if cur_qps >= floor else 1
+    return 0 if ok else 1
+
+
+def check(current_path: str, baseline_path: str = DEFAULT_BASELINE,
+          keys: str = DEFAULT_KEYS, tolerance: float = 0.25) -> int:
+    with open(current_path) as f:
+        current = json.load(f)
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    rc = 0
+    for key in [k.strip() for k in keys.split(",") if k.strip()]:
+        rc |= check_key(current, baseline, key, tolerance,
+                        current_path, baseline_path)
+    return rc
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="BENCH_serve.json produced by this run")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
-    ap.add_argument("--key", default="batched_fused")
+    ap.add_argument("--keys", default=DEFAULT_KEYS,
+                    help="comma-separated rows to floor")
     ap.add_argument("--tolerance", type=float,
                     default=float(os.environ.get(
                         "BENCH_REGRESSION_TOLERANCE", "0.25")))
     args = ap.parse_args()
-    sys.exit(check(args.current, args.baseline, args.key, args.tolerance))
+    sys.exit(check(args.current, args.baseline, args.keys, args.tolerance))

@@ -1,10 +1,17 @@
 """Generate EXPERIMENTS.md sections from dry-run/benchmark artifacts.
 
     PYTHONPATH=src python -m benchmarks.report [--v1 results/dryrun]
-        [--v2 results/dryrun_v2] [--out EXPERIMENTS.md]
+        [--v2 results/dryrun_v2] [--serve BENCH_serve.json]
+        [--out EXPERIMENTS.md]
 
 The perf story is v1 (baseline) -> v2 (optimized): both sweeps are kept
 so every before/after claim in §Perf is reproducible from artifacts.
+``--serve`` additionally renders the serving benchmark (BENCH_serve.json
+from benchmarks/serve_bench.py) — the execution-mode throughput table
+plus, when present, the ``load_sweep`` (static vs adaptive window
+sojourn across arrival rates) and ``placement`` (simulated multi-host
+topology: residency split, gather parity, relative throughput) rows,
+which earlier report versions silently dropped.
 """
 from __future__ import annotations
 
@@ -128,11 +135,70 @@ def perf_compare_section(v1: Dict[str, Dict], v2: Dict[str, Dict]) -> str:
     return "\n".join(lines) + "\n"
 
 
+def serve_section(serve: Dict) -> str:
+    """§Serving from a BENCH_serve.json: execution-mode table +
+    load_sweep + placement rows (nothing in the JSON is dropped on the
+    floor anymore — every recorded row renders)."""
+    lines = ["## §Serving", ""]
+    cfg = serve.get("config", {})
+    if cfg:
+        lines += [f"{cfg.get('n_queries', '?')} mixed queries "
+                  f"(agg/bool/ranked) at rate {cfg.get('rate', '?')}, "
+                  f"batch {cfg.get('batch_size', '?')}, "
+                  f"{cfg.get('n_shards', '?')} shards"
+                  + (", smoke corpus" if cfg.get("smoke") else ""), ""]
+    lines += ["| mode | q/s | p50 ms |", "|---|---|---|"]
+    for mode, rec in serve.items():
+        if not (isinstance(rec, dict) and "qps" in rec):
+            continue
+        p50 = rec.get("p50_ms", rec.get("p50_sojourn_ms"))
+        p50s = f"{p50:.2f}" if p50 is not None else "—"
+        note = " (sojourn)" if "p50_sojourn_ms" in rec else ""
+        lines.append(f"| {mode} | {rec['qps']:.0f} | {p50s}{note} |")
+    lines.append("")
+
+    sweep = serve.get("load_sweep")
+    if sweep:
+        lines += ["### Load sweep (static vs adaptive window)", "",
+                  "| load | mode | target q/s | served q/s | p50 ms | "
+                  "p99 ms | mean batch |",
+                  "|---|---|---|---|---|---|---|"]
+        for row in sweep:
+            lines.append(
+                f"| {row['load']} | {row['mode']} | "
+                f"{row['arrival_qps_target']:.0f} | "
+                f"{row['served_qps']:.0f} | "
+                f"{row['p50_sojourn_ms']:.2f} | "
+                f"{row['p99_sojourn_ms']:.2f} | "
+                f"{row['mean_batch']:.1f} |")
+        lines.append("")
+
+    pl = serve.get("placement")
+    if pl:
+        parity = pl.get("parity", {})
+        lines += [
+            f"### Placement ({pl.get('hosts', '?')} hosts, "
+            f"{pl.get('policy', '?')}, {pl.get('n_replicas', 0)} replica)",
+            "",
+            f"- per-host scans {pl.get('scans_per_host')} vs union-plan "
+            f"residency split {pl.get('expected_scans_per_host')} — "
+            f"match: **{pl.get('residency_match')}**",
+            "- cross-host gather parity vs single executor: "
+            + ", ".join(f"{k}={v}" for k, v in parity.items()),
+            f"- throughput vs single-host: "
+            f"**{pl.get('qps_ratio_vs_single_host', float('nan')):.2f}x**",
+            "",
+        ]
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--v1", default="results/dryrun")
     ap.add_argument("--v2", default=None,
                     help="optimized sweep dir (default: latest)")
+    ap.add_argument("--serve", default="BENCH_serve.json",
+                    help="serving bench JSON (skipped when absent)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     from benchmarks.roofline import default_dir
@@ -141,6 +207,8 @@ def main():
     v2 = load_recs(v2_dir) if os.path.isdir(v2_dir) else v1
     text = dryrun_section(v2) + "\n" + roofline_section(v2) + "\n" + \
         perf_compare_section(v1, v2)
+    if args.serve and os.path.exists(args.serve):
+        text += "\n" + serve_section(json.load(open(args.serve)))
     if args.out:
         with open(args.out, "w") as f:
             f.write(text)

@@ -15,7 +15,14 @@ fault-tolerant executor whose thread pool stays warm across batches
 reported against precise answers computed with a rate-1.0 batch —
 itself a single shared scan over all shards.
 
+``--hosts N`` serves through a simulated N-host topology instead: a
+blocked ``PlacementMap`` assigns shard residency, and every window's
+shared scan splits across per-host executors with a cross-host gather
+(the injected shard fault then lands on whichever host owns the shard
+and is retried there; per-host scan counts print at the end).
+
     PYTHONPATH=src python examples/serve_queries.py [--queries 48]
+        [--hosts 2]
 """
 import argparse
 import os
@@ -39,6 +46,9 @@ def main():
                     help="mean inter-arrival gap of the synthetic "
                          "query stream (microseconds)")
     ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--hosts", type=int, default=0,
+                    help="serve through a simulated N-host placement "
+                         "(locality-split scans + cross-host gather)")
     ap.add_argument("--static", action="store_true",
                     help="pin the fixed (deadline, batch) pair instead "
                          "of the adaptive window controller")
@@ -56,6 +66,7 @@ def main():
     from repro.data.corpus import SyntheticCorpusConfig, generate_text_corpus
     from repro.data.store import ShardedCorpus
     from repro.runtime import (Backpressure, BatchWindow, ControllerConfig,
+                               HostGroupExecutor, PlacementMap,
                                ShardTaskExecutor, WindowController)
 
     print("== offline index build ==")
@@ -80,9 +91,20 @@ def main():
             faults["injected"] += 1
             raise RuntimeError("injected transient fault")
 
-    executor = ShardTaskExecutor(workers=args.workers, max_retries=2,
-                                 fault_hook=fault_hook,
-                                 adaptive_workers=True)
+    if args.hosts >= 2:
+        placement = PlacementMap.blocked(corpus.n_shards, args.hosts,
+                                         n_replicas=1)
+        executor = HostGroupExecutor(
+            placement,
+            workers_per_host=max(1, args.workers // args.hosts),
+            max_retries=2, fault_hook=fault_hook, adaptive_workers=True)
+        print(f"   placement: {args.hosts} hosts (blocked, 1 replica); "
+              f"shard residency "
+              f"{[len(placement.shards_on(h)) for h in range(args.hosts)]}")
+    else:
+        executor = ShardTaskExecutor(workers=args.workers, max_retries=2,
+                                     fault_hook=fault_hook,
+                                     adaptive_workers=True)
     engine = QueryBatch(corpus, index, executor=executor)
 
     rng = np.random.default_rng(0)
@@ -191,10 +213,19 @@ def main():
               f"utilization {plan.utilization:.2f}, "
               f"arrival rate {plan.arrival_rate:.0f}/s"
               + (f", scan share {scan:.0%}" if scan is not None else ""))
-    print(f"   injected faults survived: {faults['injected']} "
-          f"(executor retries: {executor.stats['retries']}; warm pool "
-          f"rebuilds: {executor.stats['pool_rebuilds']} across "
-          f"{executor.stats['jobs']} jobs)")
+    if args.hosts >= 2:
+        retries = sum(ex.stats["retries"] for ex in executor.hosts.values())
+        print(f"   injected faults survived: {faults['injected']} "
+              f"(task retries across hosts: {retries}; host failures: "
+              f"{executor.stats['host_failures']}; requeued shards: "
+              f"{executor.stats['requeued_shards']})")
+        print(f"   per-host scans: {executor.stats['scans_per_host']} "
+              f"over {executor.stats['jobs']} gather jobs")
+    else:
+        print(f"   injected faults survived: {faults['injected']} "
+              f"(executor retries: {executor.stats['retries']}; warm pool "
+              f"rebuilds: {executor.stats['pool_rebuilds']} across "
+              f"{executor.stats['jobs']} jobs)")
     for kind, metric in (("agg", "mean rel err"), ("bool", "mean recall"),
                          ("ranked", "mean P@10")):
         if lat[kind]:

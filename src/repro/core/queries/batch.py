@@ -18,7 +18,13 @@ workload should amortize:
      plans and runs one *shared scan* per distinct shard
      (``ShardTaskExecutor.map_shard_batch``), evaluating all interested
      queries in that single visit — task count scales with the union,
-     not the sum.
+     not the sum.  On a multi-host topology the same union splits by
+     shard residency instead of pooling locally: pass a
+     ``runtime.placement.HostGroupExecutor`` as ``executor`` and each
+     host shared-scans only its resident slice of the union, with the
+     cross-host gather feeding the per-query reduces unchanged (the
+     executed plan is kept on ``last_plan`` so callers can audit the
+     residency split).
   3. **Scan work** — per-shard operators walk the lazily-built CSR
      postings (``data/store.shard_postings``), so the second query to
      touch a shard pays O(matching tokens), not O(shard tokens).
@@ -123,6 +129,10 @@ class QueryBatch:
         self.executor = executor
         self.method = method
         self.confidence = confidence
+        # the shard plan of the most recent execute() call (one array of
+        # sampled shard ids per query) — placement-aware callers compare
+        # its union's residency split against per-host scan telemetry
+        self.last_plan: Optional[List[np.ndarray]] = None
 
     # ------------------------------------------------------------------
     # planning: one batched scoring pass -> per-query probability rows
@@ -228,6 +238,7 @@ class QueryBatch:
             n_docs = self.corpus.n_docs
             avg_len = self.corpus.n_tokens / max(n_docs, 1)
         fns = [self._shard_fn(q, doc_freq, n_docs, avg_len) for q in queries]
+        self.last_plan = list(plan)
 
         if self.executor is not None:
             per_query = self.executor.map_shard_batch(self.corpus, plan, fns)
@@ -244,16 +255,14 @@ class QueryBatch:
         plan: Sequence[np.ndarray],
         fns: Sequence[Callable[[Any], Any]],
     ) -> List[Dict[int, Any]]:
-        """Executor-less fallback: same union-and-visit-once schedule,
-        run sequentially in-process."""
-        from repro.runtime.executor import invert_plan
-        queries_of = invert_plan(plan)
-        out: List[Dict[int, Any]] = [{} for _ in plan]
-        for sid in sorted(queries_of):
-            shard = self.corpus.shards[sid]
-            for qi in queries_of[sid]:
-                out[qi][sid] = fns[qi](shard)
-        return out
+        """Executor-less fallback: the same union-and-visit-once
+        schedule (``run_shared_scan``), run sequentially in-process."""
+        from repro.runtime.executor import run_shared_scan
+
+        def inline_mapper(corpus, shard_ids, fn):
+            return {sid: fn(corpus.shards[sid]) for sid in shard_ids}
+
+        return run_shared_scan(inline_mapper, self.corpus, plan, fns)
 
     def _reduce(self, q: BatchQuery, sample: SampleResult,
                 distinct: np.ndarray, by_shard: Dict[int, Any],

@@ -161,6 +161,25 @@ def named_sharding(mesh: Mesh, *logical_axes: Optional[str]) -> NamedSharding:
     return NamedSharding(mesh, logical_to_mesh_spec(tuple(logical_axes), mesh))
 
 
+#: Mesh axes that carry data residency — a corpus shard lives on one
+#: coordinate of their product (DP across pods, FSDP/data within one).
+#: The query runtime's PlacementMap derives its host count from these.
+RESIDENCY_AXES: Tuple[str, ...] = ("pod", "data")
+
+
+def data_host_count(mesh) -> int:
+    """Number of data-resident hosts a mesh implies: the product of the
+    residency axes present in it (``pod`` x ``data``; axes absent from
+    the mesh contribute 1).  Accepts a concrete ``Mesh`` or an
+    ``AbstractMesh`` — placement only needs the shape, so simulated
+    topologies never have to allocate devices."""
+    shape = dict(mesh.shape)
+    n = 1
+    for ax in RESIDENCY_AXES:
+        n *= int(shape.get(ax, 1))
+    return n
+
+
 def mesh_axis_size(axis: str) -> Optional[int]:
     """Size of a mesh axis in the ambient jit mesh (None outside)."""
     try:

@@ -222,9 +222,12 @@ def asym_topk_kernel(
     global doc indices) with J = ceil(M/TM) — per-tile candidates only;
     the ops wrapper runs the cheap final top-k over them.
 
-    HARDWARE ADAPTATION note: K is the output block's lane width; on a
-    real TPU pick K (or pad it) to a multiple of the 128-lane registers
-    — interpret mode (this container) has no alignment constraint."""
+    HARDWARE ADAPTATION note: K is the output block's lane width and
+    must be a multiple of the 128-lane registers for Mosaic to lower
+    the [TB, K] stores onto hardware tiles — on TPU the ops wrapper
+    (``asym_exp_topk``) lane-pads the caller's k before it reaches
+    here; interpret mode (this container) has no alignment constraint
+    and skips the padding to avoid the extra per-tile work."""
     b, dim = q.shape
     m, w = db_packed.shape
     assert w * 32 >= bits, (w, bits)

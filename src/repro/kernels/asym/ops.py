@@ -77,20 +77,35 @@ def asym_exp_segment_sum(query_vecs: jax.Array, db_packed: jax.Array,
 def asym_exp_topk(query_vecs: jax.Array, db_packed: jax.Array,
                   planes: jax.Array, bits: int, k: int,
                   *, tb: int = 8, tm: int = 256,
-                  temperature: float = 1.0) -> "tuple[jax.Array, jax.Array]":
+                  temperature: float = 1.0,
+                  pad_lanes: "bool | None" = None,
+                  ) -> "tuple[jax.Array, jax.Array]":
     """Fused scoring + ranked reduction: returns ([B, k] int32 doc
     indices, [B, k] float32 values), each row sorted by descending
     exp(temperature * asym-cos).  Stage 1 (in-kernel) keeps only the
-    per-tile top-k; stage 2 reduces the [B, ceil(M/TM)*k] candidate
-    set — the full [B, M] matrix never reaches HBM."""
+    per-tile top-k; stage 2 reduces the [B, ceil(M/TM)*kp] candidate
+    set — the full [B, M] matrix never reaches HBM.
+
+    K is the kernel's output-block lane width, so on TPU it is padded
+    here to a multiple of the 128-lane registers (``kp``) and the
+    final top-k slices back to the caller's k — Mosaic then always
+    sees aligned [TB, kp] stores (hardware tile shapes reject ragged
+    K).  The padding only widens the per-tile candidate sets, a
+    superset of the unpadded candidates, so results are unchanged —
+    but it is real extra work, so interpret mode (which tolerates
+    ragged K) skips it; ``pad_lanes`` overrides the default for
+    parity tests of the padded shape off-TPU."""
     q, b, tb = _prep_queries(query_vecs, tb)
     m = db_packed.shape[0]
     k = min(int(k), m)
+    if pad_lanes is None:
+        pad_lanes = on_tpu()
+    kp = -(-k // 128) * 128 if pad_lanes else k
     tm = min(tm, max(1, m))
-    tm = max(tm, k)          # a tile must be able to hold k candidates
+    tm = max(tm, kp)         # a tile must be able to hold kp candidates
     db = pad_rows(jnp.asarray(db_packed, jnp.uint32), tm)
     vals, idx = _k.asym_topk_kernel(
-        q, jnp.asarray(planes, jnp.float32), db, bits, k, m,
+        q, jnp.asarray(planes, jnp.float32), db, bits, kp, m,
         tb=tb, tm=tm, interpret=not on_tpu(), temperature=temperature)
     vals, idx = vals[:b], idx[:b]
     top_vals, pos = jax.lax.top_k(vals, k)

@@ -24,3 +24,15 @@ def make_host_mesh():
     tests."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_placement_mesh(n_hosts: int, *, model: int = 1):
+    """Abstract (data, model) mesh describing an ``n_hosts``-wide data
+    axis *without touching device state* — the serving runtime's
+    ``PlacementMap.from_mesh`` reads shard residency off it, so a
+    simulated multi-host topology (tests, ``--hosts N`` benches on one
+    machine) and a real pod deployment configure placement the same
+    way: swap this for ``make_production_mesh()`` and nothing else
+    changes."""
+    from jax.sharding import AbstractMesh
+    return AbstractMesh((("data", int(n_hosts)), ("model", int(model))))

@@ -1,3 +1,20 @@
+"""The query-side serving runtime, bottom-up:
+
+  ``executor``   — single-host fault-tolerant shard tasks (warm pool,
+                   retry, straggler speculation, shared scans)
+  ``placement``  — shard -> host residency (``PlacementMap``) and the
+                   multi-host executor (``HostGroupExecutor``):
+                   per-host shared scans, cross-host gather, replica
+                   failover
+  ``window``     — the batching frontend (``BatchWindow``): stream of
+                   queries in, deadline/size-closed batches out
+  ``controller`` — queueing-theory window autotuner
+                   (``WindowController``) + ``Backpressure`` shedding
+
+``BatchWindow`` takes either executor flavor behind its engine — a
+single-host pool and a placement-split host group expose the same
+``map_shard_batch`` surface.
+"""
 from repro.runtime.controller import (  # noqa: F401
     Backpressure,
     ControllerConfig,
@@ -5,4 +22,9 @@ from repro.runtime.controller import (  # noqa: F401
     WindowPlan,
 )
 from repro.runtime.executor import ShardTaskExecutor  # noqa: F401
+from repro.runtime.placement import (  # noqa: F401
+    HostFailure,
+    HostGroupExecutor,
+    PlacementMap,
+)
 from repro.runtime.window import BatchWindow  # noqa: F401

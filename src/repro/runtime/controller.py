@@ -11,12 +11,24 @@ one lets the single dispatcher saturate with no signal to callers.
     instantaneous arrival rate ``lambda``.  A second, slower EWMA of
     squared gap deviations gives a burstiness hint (diagnostic only).
   * **Service model** — per-batch observations ``(n, service_s)`` feed
-    exponentially-weighted first/second moments from which the batch
+    exponentially-weighted first/second moments from which a batch
     cost line ``s(n) = c0 + c1 * n`` is recovered (covariance over
     variance; the same running-moments trick as Welford, but with
     exponential forgetting so the model tracks warmup -> warm shifts).
     ``c0`` is the per-window overhead the batch amortizes (planning,
     dispatch, kernel launch), ``c1`` the marginal per-query cost.
+    The cost model is *piecewise*: observations route into a small-n
+    fit (``n < pivot_batch``) and a large-n fit, and the planner costs
+    each candidate from the fit of the regime its predicted batch size
+    falls in (``service_cost``), falling back to the pooled all-sizes
+    line until a regime has data.  One pooled line systematically
+    overestimates small windows — the shared scan's union coverage
+    saturates with batch size, so the true s(n) is concave, and an
+    intercept fitted mostly from large batches charges a 1-2 query
+    window far more than it costs.  In the *transition* band (arrivals
+    ~0.5-1.5x batched capacity) that inflated small-n cost made the
+    planner flee to long deadlines the static 2 ms pair beat; the
+    small-n fit restores honest pricing there.
   * **Plan** — on every batch completion (and at least every
     ``control_period_s``) the controller sweeps a small candidate grid
     (geometric deadlines x doubling batch sizes, both clamped to
@@ -113,6 +125,8 @@ class ControllerConfig:
     arrival_alpha: float = 0.1      # EWMA gain for inter-arrival gaps
     service_alpha: float = 0.2      # EWMA gain for batch-cost moments
     n_delay_candidates: int = 8     # geometric grid resolution
+    pivot_batch: int = 8            # small-n / large-n regime boundary
+    #                                 (1 collapses to one pooled fit)
 
     def __post_init__(self):
         if not (0 < self.min_delay_s <= self.max_delay_s):
@@ -127,6 +141,58 @@ class ControllerConfig:
             a = getattr(self, name)
             if not (0 < a <= 1):
                 raise ValueError(f"{name} must be in (0, 1], got {a}")
+        if self.pivot_batch < 1:
+            raise ValueError(
+                f"pivot_batch must be >= 1, got {self.pivot_batch}")
+
+
+class _CostFit:
+    """Exponentially-forgotten first/second moments of (n, service_s)
+    observations for one batch-size regime, recoverable as a cost line
+    (the covariance-over-variance fit ``service_model`` documents).
+    ``seed`` pre-loads a benign prior (the pooled fit uses one so the
+    first plan is sane before any batch completes); unseeded fits
+    initialize from their first observation."""
+
+    def __init__(self, alpha: float, seed_per_item_s: float,
+                 seed: Optional[Tuple[float, float]] = None):
+        self.alpha = float(alpha)
+        self.seed_per_item = float(seed_per_item_s)
+        self.count = 0
+        self.m_n = self.m_s = self.m_nn = self.m_ns = 0.0
+        if seed is not None:
+            n, s = seed
+            self.m_n, self.m_s = float(n), float(s)
+            self.m_nn, self.m_ns = float(n * n), float(n * s)
+
+    def observe(self, n: float, s: float) -> None:
+        if self.count == 0 and self.m_nn == 0.0:
+            self.m_n, self.m_s = n, s
+            self.m_nn, self.m_ns = n * n, n * s
+        else:
+            a = self.alpha
+            self.m_n += a * (n - self.m_n)
+            self.m_s += a * (s - self.m_s)
+            self.m_nn += a * (n * n - self.m_nn)
+            self.m_ns += a * (n * s - self.m_ns)
+        self.count += 1
+
+    def line(self) -> Tuple[float, float]:
+        """``(c0, c1)`` of ``s(n) = c0 + c1 * n`` over this regime's
+        observations.  The covariance fit is only trusted once the
+        observed batch sizes genuinely spread (var >= 0.25, i.e. more
+        than jitter around one size): a fit over near-identical sizes
+        amplifies service-time noise into wild marginal costs, and one
+        bad transient ``c1`` is enough to misplan a long idle deadline
+        straight into the sojourn tail.  Near-constant sizes instead
+        split the mean cost with the seeded marginal estimate."""
+        var_n = self.m_nn - self.m_n * self.m_n
+        cov = self.m_ns - self.m_n * self.m_s
+        if var_n >= 0.25 and cov > 0:
+            c1 = min(cov / var_n, self.m_s / max(self.m_n, 1.0))
+            return max(self.m_s - c1 * self.m_n, 0.0), c1
+        c1 = min(self.seed_per_item, self.m_s / max(self.m_n, 1.0))
+        return max(self.m_s - c1 * self.m_n, 0.0), c1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,14 +222,16 @@ class WindowController:
         self._last_arrival: Optional[float] = None
         self._mean_gap: Optional[float] = None   # EWMA inter-arrival gap
         self._gap_var: float = 0.0               # EWMA squared deviation
-        # exponentially-forgotten first/second moments of (n, s) batch
-        # observations; seeded with a benign 1-query prior so the first
-        # plan is sane before any batch has completed
-        self._m_n = 1.0
-        self._m_s = float(seed_service_s)
-        self._m_nn = 1.0
-        self._m_ns = float(seed_service_s)
-        self._seed_per_item = float(seed_per_item_s)
+        # piecewise service model: every observation feeds the pooled
+        # all-sizes fit (seeded with a benign 1-query prior so the first
+        # plan is sane before any batch has completed) plus the fit of
+        # its size regime; candidates are costed from their regime's fit
+        # once it has data (see service_cost)
+        a = self.config.service_alpha
+        self._fit_all = _CostFit(a, seed_per_item_s,
+                                 seed=(1.0, float(seed_service_s)))
+        self._fit_small = _CostFit(a, seed_per_item_s)
+        self._fit_large = _CostFit(a, seed_per_item_s)
         self._n_batches = 0
         self._scan_s: Optional[float] = None     # executor telemetry EWMA
         self._plan: Optional[WindowPlan] = None
@@ -196,10 +264,10 @@ class WindowController:
         if n < 1 or service_s < 0:
             return
         a = self.config.service_alpha
-        self._m_n += a * (n - self._m_n)
-        self._m_s += a * (service_s - self._m_s)
-        self._m_nn += a * (n * n - self._m_nn)
-        self._m_ns += a * (n * service_s - self._m_ns)
+        self._fit_all.observe(float(n), float(service_s))
+        regime = (self._fit_small if n < self.config.pivot_batch
+                  else self._fit_large)
+        regime.observe(float(n), float(service_s))
         if scan_s is not None:
             self._scan_s = (scan_s if self._scan_s is None else
                             self._scan_s + a * (scan_s - self._scan_s))
@@ -220,64 +288,65 @@ class WindowController:
         return 1.0 / self._mean_gap
 
     def service_model(self) -> Tuple[float, float]:
-        """``(c0, c1)`` of the batch cost line ``s(n) = c0 + c1 * n``.
+        """``(c0, c1)`` of the *pooled* (all sizes) batch cost line
+        ``s(n) = c0 + c1 * n`` — the fallback the planner uses until a
+        size regime has its own observations, and the stable summary
+        surfaced in stats (see ``_CostFit.line`` for the fit guard)."""
+        return self._fit_all.line()
 
-        The covariance fit is only trusted once the observed batch
-        sizes genuinely spread (var >= 0.25, i.e. more than jitter
-        around one size): a fit over near-identical sizes amplifies
-        service-time noise into wild marginal costs, and one bad
-        transient ``c1`` is enough to misplan a long idle deadline
-        straight into the sojourn tail."""
-        var_n = self._m_nn - self._m_n * self._m_n
-        cov = self._m_ns - self._m_n * self._m_s
-        if var_n >= 0.25 and cov > 0:
-            c1 = min(cov / var_n, self._m_s / max(self._m_n, 1.0))
-            return max(self._m_s - c1 * self._m_n, 0.0), c1
-        # batch sizes (nearly) constant so far: split the mean cost
-        # with the seeded marginal estimate
-        c1 = min(self._seed_per_item, self._m_s / max(self._m_n, 1.0))
-        return max(self._m_s - c1 * self._m_n, 0.0), c1
+    def service_cost(self, n: float) -> float:
+        """Estimated batch service time ``s(n)`` under the piecewise
+        cost model: the fit of ``n``'s own size regime (small-n below
+        ``pivot_batch``, large-n at or above it) once that regime has
+        seen at least two batches, else the pooled line.  Two
+        observations, not one — a single batch is indistinguishable
+        from noise, and the regime fit replaces the pooled line
+        entirely for its half of the candidate grid."""
+        fit = (self._fit_small if n < self.config.pivot_batch
+               else self._fit_large)
+        c0, c1 = fit.line() if fit.count >= 2 else self._fit_all.line()
+        return c0 + c1 * n
 
     @property
     def scan_fraction(self) -> Optional[float]:
         """Share of batch service spent in the executor's shared scan
         (None until executor telemetry has been observed)."""
-        if self._scan_s is None or self._m_s <= 0:
+        if self._scan_s is None or self._fit_all.m_s <= 0:
             return None
-        return min(self._scan_s / self._m_s, 1.0)
+        return min(self._scan_s / self._fit_all.m_s, 1.0)
 
     # ------------------------------------------------------------------
     # planning
     # ------------------------------------------------------------------
-    @staticmethod
-    def _regime_p99(lam: float, n: float, wait: float,
-                    c0: float, c1: float) -> Tuple[float, float]:
-        s = c0 + c1 * n
+    def _regime_p99(self, lam: float, n: float,
+                    wait: float) -> Tuple[float, float]:
+        s = self.service_cost(n)
         rho = lam * s / max(n, 1.0)
         if rho >= 1.0:
             return math.inf, rho
         queue = rho / (1.0 - rho) * s / 2.0
         return wait + TAIL_P99 * queue + s, rho
 
-    def _estimate_p99(self, lam: float, d: float, batch: int,
-                      c0: float, c1: float) -> Tuple[float, float]:
+    def _estimate_p99(self, lam: float, d: float,
+                      batch: int) -> Tuple[float, float]:
         """(estimated p99 sojourn, utilization) for one candidate: the
         better of the arrival-fed and queue-fed regimes (see module
-        docstring)."""
+        docstring), costed by the piecewise model at the batch size the
+        regime predicts."""
         if lam <= 0:
             # no traffic: a lone query waits the full deadline
-            return d + c0 + c1, 0.0
+            return d + self.service_cost(1.0), 0.0
         fill = (batch - 1) / lam
         if fill <= d:
             n, wait = float(batch), fill
         else:
             n, wait = min(1.0 + lam * d, float(batch)), d
-        arrival = self._regime_p99(lam, n, wait, c0, c1)
+        arrival = self._regime_p99(lam, n, wait)
         if not math.isinf(arrival[0]):
             return arrival
         # arrival-fed service can't keep up, so a backlog forms and
         # feeds full windows; the deadline only delays dispatch
-        return self._regime_p99(lam, float(batch), min(d, fill), c0, c1)
+        return self._regime_p99(lam, float(batch), min(d, fill))
 
     def _candidates(self) -> Tuple[List[float], List[int]]:
         cfg = self.config
@@ -296,12 +365,11 @@ class WindowController:
         call this; serving code wants ``window_params``)."""
         now = time.perf_counter() if now is None else now
         lam = self.arrival_rate
-        c0, c1 = self.service_model()
         delays, batches = self._candidates()
         best: Optional[Tuple[float, float, float, int]] = None
         for d in delays:
             for b in batches:
-                p99, rho = self._estimate_p99(lam, d, b, c0, c1)
+                p99, rho = self._estimate_p99(lam, d, b)
                 key = (p99, d, b)
                 if best is None or key < (best[0], best[2], best[3]):
                     best = (p99, rho, d, b)
@@ -314,7 +382,7 @@ class WindowController:
             # latency — serve immediately with the largest batch and
             # let backpressure shed the excess.
             d, b = self.config.min_delay_s, self.config.max_batch
-            _, rho = self._estimate_p99(lam, d, b, c0, c1)
+            _, rho = self._estimate_p99(lam, d, b)
         self._plan = WindowPlan(d, b, p99, rho, lam, saturated)
         self._plan_at = now
         return self._plan

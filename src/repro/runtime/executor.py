@@ -21,10 +21,15 @@ tasks run on a worker pool with
     to 2 workers; it widens back to ``workers`` as soon as tasks are
     long enough to release the GIL meaningfully.
 
-On a TPU cluster the same policy applies at pod granularity (a pod is a
-worker; shards are its resident data) — the executor keeps that mapping
-abstract by operating on shard ids.  Failure injection for tests is via
-``fault_hook`` which may raise on chosen shards.
+This executor is the *single-host* layer: it treats every shard it is
+handed as locally resident.  Multi-host topologies stack
+``runtime/placement.HostGroupExecutor`` on top — a ``PlacementMap``
+splits the shard set by host residency, one ``ShardTaskExecutor`` per
+host runs its resident group (per-host warm pool, per-host retry and
+speculation), and a cross-host gather merges the per-shard results.
+Failure injection for tests is via ``fault_hook`` which may raise on
+chosen shards (host-granularity injection lives on the placement
+layer).
 
 Shared-scan scheduling (``map_shard_batch``): a batch of queries, each
 with its own sampled shard plan, is inverted into one task per shard in
@@ -33,7 +38,11 @@ sampled it in a single pass.  I/O and task overhead scale with the
 union size instead of the sum of per-query plan sizes, and retry /
 speculation apply to the composite shard task, so a retried shard
 re-evaluates all of its queries (same at-least-once semantics as
-``map_shards``).
+``map_shards``).  The schedule itself (invert the plans, visit once,
+scatter back per query) is ``run_shared_scan`` — one definition shared
+by this executor, the placement layer's per-host scans, and the
+executor-less inline fallback in ``core/queries/batch.py``, so the
+schedules cannot diverge.
 """
 from __future__ import annotations
 
@@ -52,14 +61,45 @@ class ShardTaskError(RuntimeError):
 
 def invert_plan(plan: Sequence[Sequence[int]]) -> Dict[int, list]:
     """{shard_id: [query indices]} union of per-query shard plans — the
-    shared-scan schedule.  One definition serves both the executor's
-    ``map_shard_batch`` and the executor-less inline fallback in
-    ``core/queries/batch.py`` so the two schedules cannot diverge."""
+    shared-scan schedule.  One definition serves the executor's
+    ``map_shard_batch``, the placement layer's residency split, and the
+    executor-less inline fallback in ``core/queries/batch.py`` so the
+    schedules cannot diverge."""
     queries_of: Dict[int, list] = {}
     for qi, shard_ids in enumerate(plan):
         for sid in shard_ids:
             queries_of.setdefault(int(sid), []).append(qi)
     return queries_of
+
+
+def run_shared_scan(
+    mapper: Callable[[Any, Sequence[int], Callable[[Any], Any]],
+                     Dict[int, Any]],
+    corpus,
+    plan: Sequence[Sequence[int]],
+    fns: Sequence[Callable[[Any], Any]],
+) -> "list[Dict[int, Any]]":
+    """The full shared-scan schedule over any ``map_shards``-shaped
+    mapper: invert the per-query plans, visit each union shard once
+    (evaluating every interested query in that visit), and scatter the
+    per-shard composites back into one ``{shard_id: result}`` dict per
+    query.  ``ShardTaskExecutor.map_shard_batch`` runs it on the local
+    pool; ``HostGroupExecutor.map_shard_batch`` runs it through the
+    residency split + cross-host gather — same schedule either way."""
+    if len(plan) != len(fns):
+        raise ValueError(f"plan/fns length mismatch: "
+                         f"{len(plan)} != {len(fns)}")
+    queries_of = invert_plan(plan)
+
+    def shared_scan(shard):
+        return {qi: fns[qi](shard) for qi in queries_of[shard.shard_id]}
+
+    by_shard = mapper(corpus, sorted(queries_of), shared_scan)
+    out: list = [{} for _ in plan]
+    for sid, per_query in by_shard.items():
+        for qi, res in per_query.items():
+            out[qi][sid] = res
+    return out
 
 
 class ShardTaskExecutor:
@@ -321,17 +361,4 @@ class ShardTaskExecutor:
         single visit.  Retry and straggler speculation are inherited
         from ``map_shards`` at composite-task granularity.
         """
-        if len(plan) != len(fns):
-            raise ValueError(f"plan/fns length mismatch: "
-                             f"{len(plan)} != {len(fns)}")
-        queries_of = invert_plan(plan)
-
-        def shared_scan(shard):
-            return {qi: fns[qi](shard) for qi in queries_of[shard.shard_id]}
-
-        by_shard = self.map_shards(corpus, sorted(queries_of), shared_scan)
-        out: list = [{} for _ in plan]
-        for sid, per_query in by_shard.items():
-            for qi, res in per_query.items():
-                out[qi][sid] = res
-        return out
+        return run_shared_scan(self.map_shards, corpus, plan, fns)

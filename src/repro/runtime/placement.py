@@ -1,0 +1,391 @@
+"""Locality-aware shard placement + multi-host query execution.
+
+On a TPU pod the corpus shards are not a flat local pool: each host of
+the data mesh axis holds a *resident* slice of them (the Spark-executor
+/ HDFS-block layout the paper's prototype rides).  Two pieces make the
+query runtime placement-aware:
+
+``PlacementMap`` — the shard -> host residency table, plus ``R``
+replica hosts per shard for failover.  It is derived from the data
+mesh topology (``PlacementMap.from_mesh`` reads the residency axes of
+a ``launch/mesh.py`` mesh via ``distributed.sharding.data_host_count``)
+or built directly (``blocked`` mirrors how a mesh axis shards an array
+into contiguous blocks; ``round_robin`` stripes).  ``split`` is the
+scheduling primitive: it partitions a set of shard ids into per-host
+groups by residency, falling over to the first live replica for hosts
+in the ``dead`` set.
+
+``HostGroupExecutor`` — the multi-host analogue of
+``ShardTaskExecutor`` (same ``map_shards`` / ``map_shard_batch``
+surface, so ``QueryBatch`` and ``BatchWindow`` take either without
+change).  A job runs in three phases:
+
+  1. **Residency split**: the shard ids (for a batch: the *union* of
+     the per-query plans, inverted once by ``invert_plan``) are split
+     by ``PlacementMap.split`` — each host only ever scans shards it
+     holds, so no shard payload crosses the interconnect.
+  2. **Per-host shared scans**: every host group runs as one
+     ``ShardTaskExecutor`` job on that host's own executor — per-host
+     warm pools, per-host retry/straggler speculation, and for batches
+     the per-host shared scan evaluates every query that sampled a
+     resident shard in a single visit.  Host jobs run concurrently on
+     a coordinator pool (one thread per active host; on a real pod the
+     coordinator thread becomes an RPC to the host).
+  3. **Cross-host gather**: per-host results merge into one
+     ``{shard_id: result}`` map.  Partials stay at (query, shard)
+     granularity — the Hansen-Hurwitz sums, Boolean doc sets, and
+     BM25 top-k candidates a reduce consumes are exactly the per-shard
+     values the single-executor path would have produced, so the
+     merged reduce is bit-for-bit identical to single-host execution
+     (pinned by tests/test_placement.py).
+
+**Host failure**: a host job that dies (its ``ShardTaskExecutor``
+exhausts retries, or the injected ``host_fault_hook`` raises) marks
+the host dead for the rest of the job; its entire shard group is
+requeued onto the replica hosts via ``split(..., dead=...)`` and
+re-executed there — the same at-least-once semantics as task retry,
+lifted to host granularity (a requeued shard re-runs all of its
+queries).  A shard whose primary and replicas are all dead raises
+``HostFailure``.
+
+Telemetry is a per-host aggregate: ``last_job`` carries the job's
+critical-path wall time (what the window controller attributes to the
+shared scan), total task count, and the per-host breakdown;
+``stats["scans_per_host"]`` counts shard visits per host, which the
+serving bench checks against the residency split of the union plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.runtime.executor import (
+    ShardTaskExecutor,
+    invert_plan,
+    run_shared_scan,
+)
+
+
+class HostFailure(RuntimeError):
+    """A shard's primary host and every replica are dead — the job
+    cannot make progress.  ``host`` is the last host tried, ``shard_ids``
+    the orphaned shards."""
+
+    def __init__(self, host: int, shard_ids: Sequence[int]):
+        self.host = int(host)
+        self.shard_ids = [int(s) for s in shard_ids]
+        super().__init__(
+            f"host {host} failed and shards {self.shard_ids} have no "
+            f"live replica host")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementMap:
+    """Shard -> host residency with optional replicas.
+
+    ``primary[s]`` is the host shard ``s`` lives on; ``replicas[s]`` are
+    up to R additional hosts holding a copy (failover targets, primary
+    excluded).  Hosts are dense ids ``0..n_hosts-1`` — on a pod they map
+    to the coordinates of the data mesh axis."""
+
+    primary: np.ndarray          # int64 [n_shards]
+    replicas: np.ndarray         # int64 [n_shards, R] (R may be 0)
+    n_hosts: int
+
+    def __post_init__(self):
+        p = np.asarray(self.primary, np.int64)
+        r = np.asarray(self.replicas, np.int64)
+        if r.ndim != 2 or r.shape[0] != p.shape[0]:
+            raise ValueError(f"replicas must be [n_shards, R], got "
+                             f"{r.shape} for {p.shape[0]} shards")
+        object.__setattr__(self, "primary", p)
+        object.__setattr__(self, "replicas", r)
+        if self.n_hosts < 1:
+            raise ValueError(f"n_hosts must be >= 1, got {self.n_hosts}")
+        for name, a in (("primary", p), ("replicas", r)):
+            if a.size and (a.min() < 0 or a.max() >= self.n_hosts):
+                raise ValueError(f"{name} references hosts outside "
+                                 f"0..{self.n_hosts - 1}")
+        if r.shape[1] and (r == p[:, None]).any():
+            raise ValueError("a replica host duplicates its primary")
+
+    # ------------------------------------------------------------------
+    # constructors
+    # ------------------------------------------------------------------
+    @staticmethod
+    def blocked(n_shards: int, n_hosts: int,
+                n_replicas: int = 1) -> "PlacementMap":
+        """Contiguous-block residency — how a data mesh axis shards an
+        array: shard ``s`` lives on host ``s * n_hosts // n_shards``.
+        Replica ``j`` of a shard is ``(primary + j) % n_hosts``."""
+        ids = np.arange(n_shards, dtype=np.int64)
+        primary = ids * n_hosts // max(n_shards, 1)
+        return PlacementMap._with_ring_replicas(primary, n_hosts, n_replicas)
+
+    @staticmethod
+    def round_robin(n_shards: int, n_hosts: int,
+                    n_replicas: int = 1) -> "PlacementMap":
+        """Striped residency: shard ``s`` lives on host ``s % n_hosts``
+        (spreads hot shard ranges; blocked keeps range scans local)."""
+        primary = np.arange(n_shards, dtype=np.int64) % n_hosts
+        return PlacementMap._with_ring_replicas(primary, n_hosts, n_replicas)
+
+    @staticmethod
+    def from_mesh(mesh, n_shards: int, *,
+                  n_replicas: int = 1) -> "PlacementMap":
+        """Residency derived from a mesh's data-parallel topology: the
+        host count is the product of the residency axes (``pod`` x
+        ``data`` — see ``distributed.sharding.data_host_count``), and
+        shards lay out in contiguous blocks exactly like an array
+        sharded on that axis.  Accepts a concrete ``Mesh`` or an
+        ``AbstractMesh`` (placement needs only the shape)."""
+        from repro.distributed.sharding import data_host_count
+        return PlacementMap.blocked(n_shards, data_host_count(mesh),
+                                    n_replicas)
+
+    @staticmethod
+    def _with_ring_replicas(primary: np.ndarray, n_hosts: int,
+                            n_replicas: int) -> "PlacementMap":
+        r = max(0, min(int(n_replicas), n_hosts - 1))
+        offsets = np.arange(1, r + 1, dtype=np.int64)
+        replicas = (primary[:, None] + offsets[None, :]) % n_hosts
+        return PlacementMap(primary, replicas.reshape(len(primary), r),
+                            int(n_hosts))
+
+    # ------------------------------------------------------------------
+    # lookups
+    # ------------------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return int(self.primary.shape[0])
+
+    @property
+    def n_replicas(self) -> int:
+        return int(self.replicas.shape[1])
+
+    def hosts_of(self, shard_id: int) -> Tuple[int, ...]:
+        """(primary, *replicas) for one shard, in failover order."""
+        s = int(shard_id)
+        return (int(self.primary[s]),
+                *(int(h) for h in self.replicas[s]))
+
+    def shards_on(self, host: int) -> np.ndarray:
+        """Shard ids whose *primary* residency is ``host``."""
+        return np.nonzero(self.primary == int(host))[0].astype(np.int64)
+
+    def split(self, shard_ids: Sequence[int],
+              dead: frozenset = frozenset()) -> Dict[int, List[int]]:
+        """Partition shard ids into per-host groups by residency.
+
+        Each shard goes to its primary host, or — when the primary is
+        in ``dead`` — to its first live replica (failover order).
+        Raises ``HostFailure`` for a shard with no live host.  Group
+        lists preserve the input order (determinism for tests)."""
+        groups: Dict[int, List[int]] = {}
+        for sid in shard_ids:
+            sid = int(sid)
+            for h in self.hosts_of(sid):
+                if h not in dead:
+                    groups.setdefault(h, []).append(sid)
+                    break
+            else:
+                raise HostFailure(int(self.primary[sid]), [sid])
+        return groups
+
+
+class HostGroupExecutor:
+    """Locality-split executor: one ``ShardTaskExecutor`` per host,
+    per-host shared scans, cross-host gather, replica failover.
+
+    Duck-type compatible with ``ShardTaskExecutor`` where the query
+    engine touches it (``map_shards`` / ``map_shard_batch`` /
+    ``last_job`` / ``stats`` / ``close``), so it drops into
+    ``QueryBatch(executor=...)`` and behind ``BatchWindow`` unchanged.
+
+    ``workers_per_host`` sizes each host's warm pool (keep
+    ``hosts * workers_per_host`` at the single-host width for a fair
+    same-machine comparison); remaining keyword arguments are forwarded
+    to every per-host ``ShardTaskExecutor`` (``fault_hook``,
+    ``max_retries``, ``adaptive_workers``, ...).  ``host_fault_hook``
+    is the *host*-granularity failure injection: called as
+    ``(host, shard_ids)`` before the host's scan; raising kills the
+    whole host for the current job and triggers replica requeue."""
+
+    def __init__(
+        self,
+        placement: PlacementMap,
+        *,
+        workers_per_host: int = 2,
+        host_fault_hook: Optional[Callable[[int, Sequence[int]], None]] = None,
+        **executor_kw: Any,
+    ):
+        self.placement = placement
+        self.host_fault_hook = host_fault_hook
+        self.hosts: Dict[int, ShardTaskExecutor] = {
+            h: ShardTaskExecutor(workers=workers_per_host, **executor_kw)
+            for h in range(placement.n_hosts)
+        }
+        self.stats: Dict[str, Any] = {
+            "jobs": 0, "host_jobs": 0, "host_failures": 0,
+            "requeued_shards": 0,
+            "scans_per_host": [0] * placement.n_hosts,
+        }
+        self.last_job: Optional[Dict[str, Any]] = None
+        self._coord: Optional[ThreadPoolExecutor] = None
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    # coordinator pool (one slot per host; warm across jobs)
+    # ------------------------------------------------------------------
+    def _coordinator(self) -> ThreadPoolExecutor:
+        with self._lock:
+            if self._coord is None:
+                self._coord = ThreadPoolExecutor(
+                    max_workers=max(1, self.placement.n_hosts),
+                    thread_name_prefix="host-coord")
+            return self._coord
+
+    def close(self) -> None:
+        """Tear down the coordinator pool and every host's warm pool
+        (idempotent)."""
+        with self._lock:
+            coord, self._coord = self._coord, None
+        if coord is not None:
+            coord.shutdown(wait=True)
+        for ex in self.hosts.values():
+            ex.close()
+
+    def __enter__(self) -> "HostGroupExecutor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------
+    # execution
+    # ------------------------------------------------------------------
+    def _run_host(self, host: int, corpus, shard_ids: List[int],
+                  fn: Callable[[Any], Any]) -> Dict[int, Any]:
+        if self.host_fault_hook is not None:
+            self.host_fault_hook(host, shard_ids)
+        return self.hosts[host].map_shards(corpus, shard_ids, fn)
+
+    def map_shards(
+        self,
+        corpus,
+        shard_ids: Sequence[int],
+        fn: Callable[[Any], Any],
+    ) -> Dict[int, Any]:
+        """Residency-split ``fn(shard)`` over every id; returns the
+        cross-host gather ``{shard_id: result}``.
+
+        Hosts run concurrently; a failed host's group requeues onto
+        replica hosts (at-least-once at host granularity) until every
+        shard has a result or some shard runs out of live hosts."""
+        ids = [int(s) for s in shard_ids]
+        t_job = time.perf_counter()
+        dead: set = set()
+        pending = self.placement.split(ids)
+        results: Dict[int, Any] = {}
+        per_host: Dict[int, Dict[str, float]] = {}
+        failed: Dict[int, List[int]] = {}
+        errors: Dict[int, BaseException] = {}
+
+        def collect(h: int, group: List[int], run) -> None:
+            try:
+                host_res = run()
+            except Exception as exc:
+                # the host is dead for the rest of this job: its shard
+                # group moves wholesale to replica hosts.  The cause is
+                # kept so a job that runs out of replicas raises with
+                # the real failure chained — a deterministic bug in a
+                # query fn must not masquerade as pure infrastructure
+                # loss.
+                self.stats["host_failures"] += 1
+                dead.add(h)
+                failed[h] = group
+                errors[h] = exc
+                return
+            results.update(host_res)
+            self.stats["host_jobs"] += 1
+            self.stats["scans_per_host"][h] += len(host_res)
+            per_host[h] = dict(self.hosts[h].last_job or {})
+
+        while pending:
+            items = list(pending.items())
+            # all but the first group go through the coordinator; the
+            # first runs on the calling thread — the caller would only
+            # block on the gather anyway, and skipping its handoff
+            # keeps the common small-batch job at one dispatch
+            coord = self._coordinator() if len(items) > 1 else None
+            futures = [
+                (h, g, coord.submit(self._run_host, h, corpus, g, fn))
+                for h, g in items[1:]
+            ]
+            h0, g0 = items[0]
+            failed = {}
+            collect(h0, g0, lambda: self._run_host(h0, corpus, g0, fn))
+            for h, g, fut in futures:
+                collect(h, g, fut.result)
+            if failed:
+                requeue = [sid for group in failed.values()
+                           for sid in group]
+                self.stats["requeued_shards"] += len(requeue)
+                try:
+                    pending = self.placement.split(requeue,
+                                                   frozenset(dead))
+                except HostFailure as hf:
+                    # no live replica left: chain the underlying host
+                    # exception (the orphaned shard's own host if we
+                    # have it, else any from this round)
+                    cause = errors.get(hf.host)
+                    if cause is None and errors:
+                        cause = next(iter(errors.values()))
+                    raise hf from cause
+            else:
+                pending = {}
+        self.stats["jobs"] += 1
+        medians = [j["median_task_s"] for j in per_host.values()
+                   if j.get("median_task_s")]
+        self.last_job = {
+            # hosts run concurrently, so the job's service time is the
+            # coordinator's critical path (incl. the gather) — this is
+            # what the window controller attributes to the shared scan
+            "wall_s": time.perf_counter() - t_job,
+            "tasks": float(len(ids)),
+            "median_task_s": float(np.median(medians)) if medians else 0.0,
+            "hosts": float(len(per_host)),
+            "per_host_wall_s": {h: j.get("wall_s", 0.0)
+                                for h, j in per_host.items()},
+        }
+        return results
+
+    def map_shard_batch(
+        self,
+        corpus,
+        plan: Sequence[Sequence[int]],
+        fns: Sequence[Callable[[Any], Any]],
+    ) -> List[Dict[int, Any]]:
+        """Locality-split shared scan over a batch of queries: the
+        union of the per-query plans is inverted once, split by
+        residency, scanned per host (each resident shard visited once,
+        all interested queries evaluated in that visit), and gathered
+        back into one ``{shard_id: result}`` map per query — exactly
+        what the single-executor ``map_shard_batch`` produces."""
+        return run_shared_scan(self.map_shards, corpus, plan, fns)
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    def residency_split(
+            self, plan: Sequence[Sequence[int]]) -> Dict[int, int]:
+        """{host: number of union-plan shards resident on it} — the
+        per-host scan counts one batch *should* produce (the serving
+        bench checks observed scans against this)."""
+        union = sorted(invert_plan(plan))
+        return {h: len(g) for h, g in self.placement.split(union).items()}

@@ -14,8 +14,13 @@ and a dispatcher thread closes the open window when either
 Each closed window executes as one ``QueryBatch.execute`` call —
 one batched scoring pass, one shared scan over the union of sampled
 shards — on a single dispatcher thread, so the engine's rng draws stay
-in a deterministic stream.  ``flush()`` force-closes the open window;
-``close()`` drains everything and stops the dispatcher.
+in a deterministic stream.  On a multi-host engine (a
+``runtime/placement.HostGroupExecutor`` behind ``QueryBatch``) that
+shared scan splits by shard residency and runs per host; the window
+neither knows nor cares — the executor's ``last_job`` telemetry it
+forwards to the controller is already the per-host *aggregate* (the
+cross-host critical-path wall time).  ``flush()`` force-closes the
+open window; ``close()`` drains everything and stops the dispatcher.
 
 The win: low-traffic periods keep latency (a lone query waits at most
 the deadline, not for a full batch), high-traffic periods batch up to
@@ -220,6 +225,7 @@ class BatchWindow:
             if self.controller is not None and service_s is not None:
                 # the executor's per-job telemetry attributes the batch
                 # cost: scan_s is the shared-scan share of service_s
+                # (for a host group, the cross-host critical path)
                 executor = getattr(self.engine, "executor", None)
                 job = getattr(executor, "last_job", None)
                 scan_s = job["wall_s"] if job else None

@@ -154,6 +154,60 @@ def test_service_model_degenerate_sizes():
     assert c0 + 8 * c1 == pytest.approx(4e-3, rel=0.1)
 
 
+def test_piecewise_cost_model_tracks_both_regimes():
+    """Concave batch cost (tiny windows far cheaper than the pooled
+    line's intercept): the small-n fit must price a 1-2 query window
+    from small-n data, the large-n fit from large-n data, and the
+    pooled line must be visibly wrong on the small side — the bug the
+    piecewise model exists to fix."""
+    c = WindowController(CFG)
+    for _ in range(40):
+        for n in (1, 2):                     # cheap singles
+            c.observe_batch(n, 2e-4 + 2e-5 * n)
+        for n in (16, 32, 64):               # scan-dominated batches
+            c.observe_batch(n, 1.5e-3 + 2e-5 * n)
+    assert c.service_cost(1) == pytest.approx(2.2e-4, rel=0.25)
+    assert c.service_cost(32) == pytest.approx(2.14e-3, rel=0.25)
+    c0, _ = c.service_model()
+    # the pooled intercept (fitted mostly by the expensive large
+    # batches) overcharges a lone query by several x
+    assert c0 + c.service_model()[1] > 2.5 * c.service_cost(1)
+
+
+def test_piecewise_regime_without_data_falls_back_to_pooled():
+    c = WindowController(CFG)
+    for _ in range(30):
+        c.observe_batch(32, 2e-3)            # large-n data only
+    c0, c1 = c.service_model()
+    assert c.service_cost(2) == pytest.approx(c0 + 2 * c1)
+
+
+def test_transition_band_prefers_short_deadline():
+    """The mid-band regression (ROADMAP): with concave costs a pooled
+    fit inflates small-window estimates and the planner flees to long
+    deadlines.  On the same trace, the piecewise controller must plan
+    a deadline no longer than a pooled-fit controller (pivot_batch=1
+    routes everything into one regime) and no longer than the static
+    2 ms pair it used to lose to."""
+    pooled_cfg = ControllerConfig(min_delay_s=1e-4, max_delay_s=0.02,
+                                  min_batch=1, max_batch=128,
+                                  pivot_batch=1)
+    piecewise, pooled = WindowController(CFG), WindowController(pooled_cfg)
+    for c in (piecewise, pooled):
+        # ~1.5k qps: windows of a handful of queries — the transition
+        # band between single-query service and full batches
+        t = _steady(c, 1 / 1500, n_arrivals=300)
+        for _ in range(40):
+            for n in (1, 2):
+                c.observe_batch(n, 2e-4 + 2e-5 * n)
+            for n in (16, 32, 64):
+                c.observe_batch(n, 1.5e-3 + 2e-5 * n)
+    pw, pl = piecewise.plan(t), pooled.plan(t)
+    assert pw.delay_s <= pl.delay_s
+    assert pw.delay_s <= 0.002               # beats/meets the static pair
+    assert pw.est_p99_s <= pl.est_p99_s
+
+
 def test_plan_cached_until_period_or_batch():
     c = WindowController(CFG)
     _steady(c, 1e-3, t0=0.0)

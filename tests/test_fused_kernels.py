@@ -93,6 +93,7 @@ def test_hamming_segment_sum_matches_unfused(n, m, s, bits, temp):
     (3, 257, 10, 48, 128, 8.0),     # k << tile, ragged M
     (5, 100, 100, 32, 64, 4.0),     # k == M (full sort)
     (2, 700, 300, 24, 128, 1.0),    # k > default tile width
+    (2, 50, 7, 24, 64, 2.0),        # tiny M, k far below lane width
 ])
 def test_asym_topk_matches_argsort(b, m, k, dim, bits, temp):
     _, q, planes, db = _asym_setup(b, m, dim, bits, seed=b + m + k)
@@ -107,6 +108,26 @@ def test_asym_topk_matches_argsort(b, m, k, dim, bits, temp):
     # rows sorted descending
     v = np.asarray(vals)
     assert (np.diff(v, axis=1) <= 1e-6).all()
+
+
+@pytest.mark.parametrize("b,m,k", [
+    (3, 257, 10),                   # kp = 128 within the tile
+    (2, 50, 7),                     # kp = 128 exceeds M entirely
+])
+def test_asym_topk_lane_padding_is_invisible(b, m, k):
+    """The TPU lane-pad path (K -> multiple of 128; off by default in
+    interpret mode) must return exactly what the unpadded path does —
+    padding only widens the per-tile candidate sets."""
+    _, q, planes, db = _asym_setup(b, m, 32, 64, seed=b * m + k)
+    idx_p, vals_p = aops.asym_exp_topk(q, db, planes, 64, k,
+                                       temperature=4.0, pad_lanes=True)
+    idx_u, vals_u = aops.asym_exp_topk(q, db, planes, 64, k,
+                                       temperature=4.0, pad_lanes=False)
+    np.testing.assert_allclose(np.asarray(vals_p), np.asarray(vals_u),
+                               rtol=1e-6)
+    sims = np.asarray(aref.asym_exp_similarity_ref(q, db, planes, 64, 4.0))
+    picked = np.take_along_axis(sims, np.asarray(idx_p), axis=1)
+    np.testing.assert_allclose(picked, np.asarray(vals_p), rtol=1e-5)
 
 
 # ----------------------------------------------------------------------
