@@ -2,15 +2,25 @@
 
 Compares a freshly produced ``BENCH_serve.json`` against the committed
 baseline and fails (exit 1) when any floored row's throughput drops
-more than ``--tolerance`` (default 25%) below it.  Two rows are
-floored: ``batched_fused`` (the single-host fused batched path) and
+more than ``--tolerance`` (default 25%) below it.  Three rows are
+floored: ``batched_fused`` (the single-host fused batched path),
 ``batched_hosts2`` (the simulated 2-host placement path — locality
-split, per-host shared scans, cross-host gather).  The wide tolerance
-absorbs runner-to-runner CPU variance while still catching the real
-regressions this gate exists for: a serialization point sneaking back
-into the batched scoring path, postings caches being rebuilt per batch,
-the fused reduction silently falling back to per-query execution, or
-the placement layer paying a cross-host penalty on local data.
+split, per-host shared scans, cross-host gather), and ``batched_lb2``
+(the balanced hot-host path: host 0 degraded, the replica-aware
+balancer sheds its shard groups onto ring replicas — this row's
+throughput collapses if the balancer stops shedding, because the
+injected per-shard delay then lands back on the critical path).  The
+wide tolerance absorbs runner-to-runner CPU variance while still
+catching the real regressions this gate exists for: a serialization
+point sneaking back into the batched scoring path, postings caches
+being rebuilt per batch, the fused reduction silently falling back to
+per-query execution, the placement layer paying a cross-host penalty
+on local data, or the balancer losing its shed.
+
+The bench itself hard-fails (before this gate runs) on any
+balanced-vs-primary or balanced-vs-single-executor gather mismatch and
+on a balanced split that fails to reduce the hot-host makespan — the
+same pattern as the placement record's residency/parity checks.
 
   PYTHONPATH=src python -m benchmarks.check_regression /tmp/bench.json
 
@@ -28,7 +38,7 @@ import sys
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
                                 "serve_smoke.json")
-DEFAULT_KEYS = "batched_fused,batched_hosts2"
+DEFAULT_KEYS = "batched_fused,batched_hosts2,batched_lb2"
 
 
 def check_key(current: dict, baseline: dict, key: str,

@@ -9,9 +9,13 @@ so every before/after claim in §Perf is reproducible from artifacts.
 ``--serve`` additionally renders the serving benchmark (BENCH_serve.json
 from benchmarks/serve_bench.py) — the execution-mode throughput table
 plus, when present, the ``load_sweep`` (static vs adaptive window
-sojourn across arrival rates) and ``placement`` (simulated multi-host
-topology: residency split, gather parity, relative throughput) rows,
-which earlier report versions silently dropped.
+sojourn across arrival rates), ``placement`` (simulated multi-host
+topology: residency split, gather parity, relative throughput) and
+``balance`` (replica-aware hot-host balancing: primary vs balanced
+makespan, estimated vs realized per-host walls, shed counts) records,
+and the speedup scalars.  A record kind this report has no renderer
+for prints a one-line shape summary instead of vanishing — earlier
+report versions silently dropped unknown kinds.
 """
 from __future__ import annotations
 
@@ -27,7 +31,6 @@ from benchmarks.roofline import (
     PEAK_FLOPS,
     analyze_record,
     markdown_table,
-    suggestion,
 )
 
 
@@ -135,10 +138,24 @@ def perf_compare_section(v1: Dict[str, Dict], v2: Dict[str, Dict]) -> str:
     return "\n".join(lines) + "\n"
 
 
+def _summarize_record(value) -> str:
+    """One-line shape summary for a record kind this report has no
+    renderer for — unknown kinds must never vanish silently."""
+    if isinstance(value, dict):
+        keys = ", ".join(list(value)[:6])
+        more = ", …" if len(value) > 6 else ""
+        return f"dict with keys {keys}{more}"
+    if isinstance(value, (list, tuple)):
+        return f"list of {len(value)} entries"
+    return repr(value)
+
+
 def serve_section(serve: Dict) -> str:
     """§Serving from a BENCH_serve.json: execution-mode table +
-    load_sweep + placement rows (nothing in the JSON is dropped on the
-    floor anymore — every recorded row renders)."""
+    load_sweep / placement / balance records + speedup scalars; any
+    record kind without a renderer still prints a one-line summary
+    (nothing in the JSON is dropped on the floor)."""
+    rendered = {"config", "load_sweep", "placement", "balance"}
     lines = ["## §Serving", ""]
     cfg = serve.get("config", {})
     if cfg:
@@ -151,11 +168,19 @@ def serve_section(serve: Dict) -> str:
     for mode, rec in serve.items():
         if not (isinstance(rec, dict) and "qps" in rec):
             continue
+        rendered.add(mode)
         p50 = rec.get("p50_ms", rec.get("p50_sojourn_ms"))
         p50s = f"{p50:.2f}" if p50 is not None else "—"
         note = " (sojourn)" if "p50_sojourn_ms" in rec else ""
         lines.append(f"| {mode} | {rec['qps']:.0f} | {p50s}{note} |")
     lines.append("")
+    speedups = [(k, v) for k, v in serve.items()
+                if k.startswith("speedup_") and isinstance(v, (int, float))]
+    if speedups:
+        rendered.update(k for k, _ in speedups)
+        lines += ["Speedups: " + ", ".join(
+            f"{k[len('speedup_'):].replace('_', ' ')} **{v:.2f}x**"
+            for k, v in speedups), ""]
 
     sweep = serve.get("load_sweep")
     if sweep:
@@ -189,6 +214,53 @@ def serve_section(serve: Dict) -> str:
             f"**{pl.get('qps_ratio_vs_single_host', float('nan')):.2f}x**",
             "",
         ]
+
+    bal = serve.get("balance")
+    if bal:
+        audit = bal.get("last_audit") or {}
+        est = audit.get("est_cost_s") or []
+        walls = audit.get("realized_wall_s") or []
+        parity = bal.get("parity", {})
+        lines += [
+            f"### Replica-aware balance ({bal.get('hosts', '?')} hosts, "
+            f"{bal.get('n_replicas', 0)} replica, host "
+            f"{bal.get('hot_host', '?')} degraded "
+            f"{bal.get('hot_delay_ms_per_shard', 0):.1f} ms/shard)",
+            "",
+            f"- mean job makespan: primary-only "
+            f"{bal.get('primary_mean_makespan_ms', float('nan')):.2f} ms "
+            f"-> balanced "
+            f"{bal.get('balanced_mean_makespan_ms', float('nan')):.2f} ms "
+            f"(**{bal.get('makespan_reduction', float('nan')):.2f}x** "
+            f"down; {bal.get('shed_shards', 0)} shard scans shed to "
+            f"replicas)",
+        ]
+        sizes = audit.get("group_sizes") or []
+        if est and walls and sizes:
+            per_host = ", ".join(
+                f"h{h} est {1e3 * (c or 0) * n:.2f}/realized "
+                f"{1e3 * w:.2f}"
+                for h, (c, w, n) in enumerate(zip(est, walls, sizes)))
+            lines.append(
+                f"- last job per-host wall ms (est = cost x group vs "
+                f"realized): {per_host}; split {sizes} vs "
+                f"residency {audit.get('base_group_sizes')}")
+        lines += [
+            "- gather parity (vs single executor): "
+            + ", ".join(f"{k}={v}" for k, v in parity.items())
+            + "; vs primary-only split: "
+            + ", ".join(f"{k}={v}"
+                        for k, v in bal.get("parity_vs_primary",
+                                            {}).items()),
+            "",
+        ]
+
+    unknown = [k for k in serve if k not in rendered]
+    for k in unknown:
+        lines.append(f"- unrecognized record `{k}`: "
+                     f"{_summarize_record(serve[k])}")
+    if unknown:
+        lines.append("")
     return "\n".join(lines)
 
 

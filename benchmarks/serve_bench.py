@@ -48,6 +48,25 @@ same mixed workload (aggregation / Boolean / ranked, paper Table I):
                     with per-host cores, does not have (the same
                     effect already makes the single-host arm faster at
                     1 worker than 2 on this container)
+  batched_lbN     - the *hot-host* arm (runs whenever ``--hosts`` is
+                    active): same N-host topology, but host 0 is
+                    artificially degraded (the injection hook sleeps
+                    ``HOT_HOST_DELAY_S`` per resident shard before
+                    each of its scans) and the executor runs with the
+                    replica-aware balancer on.  The warm pass teaches
+                    the load model that host 0 is hot; measured trials
+                    then run the balanced split, which sheds host 0's
+                    shard groups onto their ring replicas (scans stay
+                    local — replicas hold the data).  Alongside the
+                    timing row the bench emits a ``balance`` record
+                    (estimated vs realized per-host makespan, shed
+                    counts, primary-vs-balanced makespan) and
+                    *hard-fails* unless (a) balanced results are
+                    bit-for-bit the single-executor results, (b)
+                    balanced and primary-only splits gather
+                    identically, and (c) the balanced split reduces
+                    the mean job makespan vs the primary-only split
+                    under the same hot host
 
 Each mode runs ``trials`` times and the best wall time is reported
 (the container CPU is shared; best-of filters scheduler noise).
@@ -88,6 +107,23 @@ import time
 import numpy as np
 
 from benchmarks.common import csv_row, pick_query_words, text_setup
+
+# per-resident-shard delay injected on host 0 in the hot-host arm:
+# several times the real per-shard scan cost at *both* bench scales
+# (sub-ms on the smoke corpus, ~2-8 ms/shard at full scale on a loaded
+# container), so the hot/cold cost ratio clears the balancer's
+# hysteresis band decisively everywhere — a marginal ratio would make
+# the shed (and the makespan hard-check) flap with container noise —
+# yet cheap enough that the whole arm stays in CI budget (the primary
+# arm pays it on ~half the union per job; the balanced arm sheds it)
+HOT_HOST_DELAY_S = 1e-2
+
+
+def _hot_host_hook(host, shard_ids):
+    """Degrade host 0 by HOT_HOST_DELAY_S per shard it is about to
+    scan — the straggler the balancer exists to route around."""
+    if host == 0:
+        time.sleep(HOT_HOST_DELAY_S * len(shard_ids))
 
 
 def _mixed_queries(corpus, n, rng):
@@ -281,6 +317,26 @@ def _run_paced_window(corpus, index, queries, rate, executor, seed,
     return sojourns, n / wall, dict(window.stats), n / batches
 
 
+def _result_matches(q, got, want) -> bool:
+    """Bit-for-bit result equality per query kind — the one parity
+    predicate both the placement and balance smoke gates enforce."""
+    if q.kind == "count":
+        return (got.estimate.value == want.estimate.value
+                and got.estimate.error_bound == want.estimate.error_bound)
+    if q.kind == "bool":
+        return bool(np.array_equal(got.doc_ids, want.doc_ids))
+    return bool(np.array_equal(got.doc_ids, want.doc_ids)
+                and np.array_equal(got.scores, want.scores))
+
+
+def _gather_parity(queries, got, want) -> dict:
+    """{kind: all-match} over a batch of (query, got, want) triples."""
+    parity = {"count": True, "bool": True, "ranked": True}
+    for q, g, w in zip(queries, got, want):
+        parity[q.kind] &= _result_matches(q, g, w)
+    return parity
+
+
 def _placement_report(corpus, index, queries, rate, executor, n_hosts,
                       workers, batch_size) -> dict:
     """The simulated-topology record: parity + residency verification
@@ -301,16 +357,8 @@ def _placement_report(corpus, index, queries, rate, executor, n_hosts,
         got = engine.execute(chunk, rate, rng=np.random.default_rng(seed))
         want = QueryBatch(corpus, index, executor=executor).execute(
             chunk, rate, rng=np.random.default_rng(seed))
-        for q, g, w in zip(chunk, got, want):
-            if q.kind == "count":
-                same = (g.estimate.value == w.estimate.value
-                        and g.estimate.error_bound == w.estimate.error_bound)
-            elif q.kind == "bool":
-                same = np.array_equal(g.doc_ids, w.doc_ids)
-            else:
-                same = (np.array_equal(g.doc_ids, w.doc_ids)
-                        and np.array_equal(g.scores, w.scores))
-            parity[q.kind] &= bool(same)
+        for kind, ok in _gather_parity(chunk, got, want).items():
+            parity[kind] &= ok
         for h, c in hosts.residency_split(engine.last_plan).items():
             expected_scans[h] += c
     observed = np.asarray(hosts.stats["scans_per_host"], np.int64)
@@ -331,6 +379,78 @@ def _placement_report(corpus, index, queries, rate, executor, n_hosts,
             f"!= union-plan split {expected_scans}")
     if not all(parity.values()):
         raise RuntimeError(f"cross-host gather parity violated: {parity}")
+    return record
+
+
+def _balance_report(corpus, index, queries, rate, executor, n_hosts,
+                    replicas, workers, batch_size) -> dict:
+    """The hot-host record: one untimed pass each through the
+    primary-only and the balanced split, both with host 0 degraded by
+    ``_hot_host_hook``, against the single-executor reference.  Hard
+    checks (this runs under the CI smoke gate): balanced results must
+    be bit-for-bit the single-executor results, balanced and
+    primary-only gathers must match each other, and the balanced split
+    must reduce the mean per-job makespan."""
+    from repro.core.queries import QueryBatch
+    from repro.runtime import HostGroupExecutor, PlacementMap
+    wph = max(1, workers // n_hosts)
+
+    def run_arm(balanced):
+        pm = PlacementMap.blocked(corpus.n_shards, n_hosts,
+                                  n_replicas=replicas)
+        hg = HostGroupExecutor(pm, workers_per_host=wph, balanced=balanced,
+                               host_fault_hook=_hot_host_hook)
+        engine = QueryBatch(corpus, index, executor=hg)
+        # warm pass: thread pools and, for the balanced arm, the load
+        # model's first look at the hot host (the seeded count-balanced
+        # split runs once; measured batches run the learned split)
+        engine.execute(queries[:batch_size], rate,
+                       rng=np.random.default_rng(99))
+        results, makespans = [], []
+        for i in range(0, len(queries), batch_size):
+            got = engine.execute(queries[i:i + batch_size], rate,
+                                 rng=np.random.default_rng(2000 + i))
+            results.extend(got)
+            makespans.append(max(
+                hg.last_job["per_host_wall_s"].values(), default=0.0))
+        audit, stats = engine.last_audit, dict(hg.stats)
+        stats.pop("scans_per_host", None)
+        hg.close()
+        return results, float(np.mean(makespans)), audit, stats
+
+    primary_res, primary_ms, _, _ = run_arm(balanced=False)
+    bal_res, bal_ms, audit, bal_stats = run_arm(balanced=True)
+    ref = QueryBatch(corpus, index, executor=executor)
+    want = []
+    for i in range(0, len(queries), batch_size):
+        want.extend(ref.execute(queries[i:i + batch_size], rate,
+                                rng=np.random.default_rng(2000 + i)))
+
+    parity = _gather_parity(queries, bal_res, want)
+    parity_vs_primary = _gather_parity(queries, bal_res, primary_res)
+    record = dict(
+        hosts=n_hosts, policy="blocked", n_replicas=replicas,
+        hot_host=0, hot_delay_ms_per_shard=HOT_HOST_DELAY_S * 1e3,
+        primary_mean_makespan_ms=primary_ms * 1e3,
+        balanced_mean_makespan_ms=bal_ms * 1e3,
+        makespan_reduction=primary_ms / max(bal_ms, 1e-12),
+        shed_shards=bal_stats.get("shed_shards", 0),
+        last_audit=audit,
+        parity=parity, parity_vs_primary=parity_vs_primary,
+        host_stats=bal_stats,
+    )
+    if not all(parity.values()):
+        raise RuntimeError(
+            f"balanced gather diverged from the single executor: {parity}")
+    if not all(parity_vs_primary.values()):
+        raise RuntimeError(
+            f"balanced gather diverged from the primary-only split: "
+            f"{parity_vs_primary}")
+    if bal_ms >= primary_ms:
+        raise RuntimeError(
+            f"balanced split did not reduce the hot-host makespan: "
+            f"balanced {bal_ms * 1e3:.2f} ms >= primary "
+            f"{primary_ms * 1e3:.2f} ms")
     return record
 
 
@@ -395,7 +515,8 @@ def run_sweep(corpus, index, queries, rate, executor, batch_size) -> list:
 
 def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
         workers: int = 2, trials: int = 3, out_path: str = None,
-        smoke: bool = False, sweep: bool = False, hosts: int = 0) -> dict:
+        smoke: bool = False, sweep: bool = False, hosts: int = 0,
+        replicas: int = 1) -> dict:
     if smoke:
         # CI budget: tiny corpus, short PV training.  The arms
         # themselves cost milliseconds next to the setup, so 5 trials
@@ -436,16 +557,31 @@ def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
         "windowed": lambda seed: _run_windowed(
             corpus, index, queries, rate, executor, seed, batch_size),
     }
-    host_exec = None
+    host_exec = lb_exec = None
     if hosts >= 2:
         from repro.runtime import HostGroupExecutor, PlacementMap
         # same total worker threads as the single-host arms: the row
         # measures placement overhead, not extra parallelism
         host_exec = HostGroupExecutor(
-            PlacementMap.blocked(corpus.n_shards, hosts, n_replicas=1),
+            PlacementMap.blocked(corpus.n_shards, hosts,
+                                 n_replicas=replicas),
             workers_per_host=max(1, workers // hosts))
         arms[f"batched_hosts{hosts}"] = lambda seed: _run_batched(
             corpus, index, queries, rate, host_exec, seed, batch_size)
+        if replicas >= 1:
+            # the hot-host arm: host 0 degraded, balancer on.  The warm
+            # pass (arm(0) below) is where the load model learns the
+            # heat; measured trials run the learned, shed split
+            lb_exec = HostGroupExecutor(
+                PlacementMap.blocked(corpus.n_shards, hosts,
+                                     n_replicas=replicas),
+                workers_per_host=max(1, workers // hosts),
+                balanced=True, host_fault_hook=_hot_host_hook)
+            arms[f"batched_lb{hosts}"] = lambda seed: _run_batched(
+                corpus, index, queries, rate, lb_exec, seed, batch_size)
+        else:
+            print("NOTE: --replicas 0 — the balanced hot-host arm needs "
+                  "at least one replica to shed onto; skipping it")
     per_query_arms = {"per_query_scan", "per_query", "windowed"}
     report = {}
     for name, arm in arms.items():
@@ -485,6 +621,14 @@ def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
         csv_row(f"serve_placement_hosts{hosts}", 0.0,
                 f"{ratio:.2f}x of single-host")
         host_exec.close()
+        if lb_exec is not None:
+            report["balance"] = _balance_report(
+                corpus, index, queries, rate, executor, hosts, replicas,
+                workers, batch_size)
+            csv_row(f"serve_balance_hosts{hosts}", 0.0,
+                    f"makespan {report['balance']['makespan_reduction']:.2f}x"
+                    f" down, shed {report['balance']['shed_shards']}")
+            lb_exec.close()
 
     if sweep:
         report["load_sweep"] = run_sweep(corpus, index, queries, rate,
@@ -500,7 +644,7 @@ def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
                             batch_size=batch_size, workers=workers,
                             trials=trials, n_shards=corpus.n_shards,
                             n_docs=corpus.n_docs, smoke=smoke,
-                            hosts=hosts,
+                            hosts=hosts, replicas=replicas,
                             executor_stats=dict(executor.stats))
     csv_row("serve_speedup_batched_vs_per_query", 0.0,
             f"{report['speedup_batched_vs_per_query']:.2f}x")
@@ -528,8 +672,13 @@ if __name__ == "__main__":
     ap.add_argument("--hosts", type=int, default=0,
                     help="add a simulated N-host placement arm "
                          "(batched_hostsN row + placement parity/"
-                         "residency record; --smoke defaults to 2)")
+                         "residency record, plus the balanced hot-host "
+                         "batched_lbN row + balance record; --smoke "
+                         "defaults to 2)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="ring replicas per shard in the placement arms "
+                         "(the balanced hot-host arm needs >= 1)")
     ap.add_argument("--out", default=None, help="output json path")
     args = ap.parse_args()
     run(smoke=args.smoke, sweep=args.sweep, hosts=args.hosts,
-        out_path=args.out)
+        replicas=args.replicas, out_path=args.out)

@@ -16,13 +16,21 @@ reported against precise answers computed with a rate-1.0 batch —
 itself a single shared scan over all shards.
 
 ``--hosts N`` serves through a simulated N-host topology instead: a
-blocked ``PlacementMap`` assigns shard residency, and every window's
-shared scan splits across per-host executors with a cross-host gather
-(the injected shard fault then lands on whichever host owns the shard
-and is retried there; per-host scan counts print at the end).
+blocked ``PlacementMap`` (``--replicas R`` ring replicas per shard)
+assigns shard residency, and every window's shared scan splits across
+per-host executors with a cross-host gather (the injected shard fault
+then lands on whichever host owns the shard and is retried there;
+per-host scan counts print at the end).  The replica-aware balancer is
+on by default (``--no-balance`` pins the primary-only residency
+split): per-host realized wall times feed a load model that sheds
+shard groups from hot hosts onto their live replicas.
+``--hot-host-ms M`` makes host 0 a straggler (M ms per resident shard
+before each of its scans) so the shed is visible — the end-of-run
+balance line shows estimated vs realized makespan and how many scans
+moved.
 
     PYTHONPATH=src python examples/serve_queries.py [--queries 48]
-        [--hosts 2]
+        [--hosts 2] [--replicas 1] [--hot-host-ms 2] [--no-balance]
 """
 import argparse
 import os
@@ -49,6 +57,16 @@ def main():
     ap.add_argument("--hosts", type=int, default=0,
                     help="serve through a simulated N-host placement "
                          "(locality-split scans + cross-host gather)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="ring replicas per shard in the placement "
+                         "(shed targets for the balancer and failover)")
+    ap.add_argument("--no-balance", action="store_true",
+                    help="pin the primary-only residency split instead "
+                         "of the replica-aware load balancer")
+    ap.add_argument("--hot-host-ms", type=float, default=0.0,
+                    help="degrade host 0 by this many ms per resident "
+                         "shard before each scan (makes the balancer's "
+                         "shed visible)")
     ap.add_argument("--static", action="store_true",
                     help="pin the fixed (deadline, batch) pair instead "
                          "of the adaptive window controller")
@@ -93,14 +111,24 @@ def main():
 
     if args.hosts >= 2:
         placement = PlacementMap.blocked(corpus.n_shards, args.hosts,
-                                         n_replicas=1)
+                                         n_replicas=args.replicas)
+        host_hook = None
+        if args.hot_host_ms > 0:
+            def host_hook(host, shard_ids):
+                if host == 0:
+                    time.sleep(args.hot_host_ms * 1e-3 * len(shard_ids))
+        balanced = not args.no_balance and args.replicas >= 1
         executor = HostGroupExecutor(
             placement,
             workers_per_host=max(1, args.workers // args.hosts),
-            max_retries=2, fault_hook=fault_hook, adaptive_workers=True)
-        print(f"   placement: {args.hosts} hosts (blocked, 1 replica); "
-              f"shard residency "
-              f"{[len(placement.shards_on(h)) for h in range(args.hosts)]}")
+            max_retries=2, fault_hook=fault_hook, adaptive_workers=True,
+            balanced=balanced, host_fault_hook=host_hook)
+        print(f"   placement: {args.hosts} hosts (blocked, "
+              f"{placement.n_replicas} replica); shard residency "
+              f"{[len(placement.shards_on(h)) for h in range(args.hosts)]}; "
+              f"balancer {'on' if balanced else 'off'}"
+              + (f"; host 0 degraded {args.hot_host_ms:.1f} ms/shard"
+                 if host_hook else ""))
     else:
         executor = ShardTaskExecutor(workers=args.workers, max_retries=2,
                                      fault_hook=fault_hook,
@@ -221,6 +249,17 @@ def main():
               f"{executor.stats['requeued_shards']})")
         print(f"   per-host scans: {executor.stats['scans_per_host']} "
               f"over {executor.stats['jobs']} gather jobs")
+        audit = engine.last_audit
+        if audit is not None:
+            print(f"   balance: split {audit['group_sizes']} vs residency "
+                  f"{audit['base_group_sizes']} "
+                  f"({'shed ' + str(audit['shed']) if audit['balanced'] else 'held by hysteresis'}; "
+                  f"{executor.stats['shed_shards']} scans shed total); "
+                  f"last-job makespan est "
+                  f"{audit['est_makespan_s'] * 1e3:.2f} ms / realized "
+                  f"{audit['realized_makespan_s'] * 1e3:.2f} ms "
+                  f"(residency split would est "
+                  f"{audit['est_base_makespan_s'] * 1e3:.2f} ms)")
     else:
         print(f"   injected faults survived: {faults['injected']} "
               f"(executor retries: {executor.stats['retries']}; warm pool "

@@ -24,7 +24,9 @@ workload should amortize:
      host shared-scans only its resident slice of the union, with the
      cross-host gather feeding the per-query reduces unchanged (the
      executed plan is kept on ``last_plan`` so callers can audit the
-     residency split).
+     residency split, and a balanced host group's split decision —
+     estimated vs realized per-host makespan, shed count — lands on
+     ``last_audit``).
   3. **Scan work** — per-shard operators walk the lazily-built CSR
      postings (``data/store.shard_postings``), so the second query to
      touch a shard pays O(matching tokens), not O(shard tokens).
@@ -133,6 +135,10 @@ class QueryBatch:
         # sampled shard ids per query) — placement-aware callers compare
         # its union's residency split against per-host scan telemetry
         self.last_plan: Optional[List[np.ndarray]] = None
+        # the balance record of the most recent execute() call, when the
+        # executor is a balanced HostGroupExecutor (estimated vs
+        # realized per-host makespan, shed count) — None otherwise
+        self.last_audit: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------------------------
     # planning: one batched scoring pass -> per-query probability rows
@@ -242,8 +248,13 @@ class QueryBatch:
 
         if self.executor is not None:
             per_query = self.executor.map_shard_batch(self.corpus, plan, fns)
+            job = getattr(self.executor, "last_job", None)
+            self.last_audit = (dict(job["balance"])
+                               if isinstance(job, dict) and "balance" in job
+                               else None)
         else:
             per_query = self._inline_shared_scan(plan, fns)
+            self.last_audit = None
 
         elapsed = time.perf_counter() - t0
         return [self._reduce(q, samples[i], plan[i], per_query[i], elapsed,

@@ -6,15 +6,34 @@
                    multi-host executor (``HostGroupExecutor``):
                    per-host shared scans, cross-host gather, replica
                    failover
+  ``balance``    — replica-aware load balancing (``HostLoadModel`` +
+                   ``plan_split``): per-host EWMA cost model over
+                   realized host-group wall times, greedy LPT shedding
+                   from hot hosts onto live replicas, hysteresis
+                   against flapping
   ``window``     — the batching frontend (``BatchWindow``): stream of
                    queries in, deadline/size-closed batches out
   ``controller`` — queueing-theory window autotuner
                    (``WindowController``) + ``Backpressure`` shedding
 
+The multi-host dataflow is placement -> balance -> executor: the
+``PlacementMap`` bounds where a shard *may* run (primary + live ring
+replicas — residency), the balancer picks where it *should* (cost-aware
+split, failover as the infinitely-hot-host special case), and the
+per-host ``ShardTaskExecutor`` fleet runs the groups, feeding realized
+per-host wall times back into the balancer's cost model.  The gather
+above is split-agnostic, so every flavor of split produces bit-for-bit
+the single-executor results.
+
 ``BatchWindow`` takes either executor flavor behind its engine — a
 single-host pool and a placement-split host group expose the same
 ``map_shard_batch`` surface.
 """
+from repro.runtime.balance import (  # noqa: F401
+    BalanceConfig,
+    HostLoadModel,
+    plan_split,
+)
 from repro.runtime.controller import (  # noqa: F401
     Backpressure,
     ControllerConfig,

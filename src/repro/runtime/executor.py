@@ -23,10 +23,14 @@ tasks run on a worker pool with
 
 This executor is the *single-host* layer: it treats every shard it is
 handed as locally resident.  Multi-host topologies stack
-``runtime/placement.HostGroupExecutor`` on top — a ``PlacementMap``
-splits the shard set by host residency, one ``ShardTaskExecutor`` per
-host runs its resident group (per-host warm pool, per-host retry and
-speculation), and a cross-host gather merges the per-shard results.
+``runtime/placement.HostGroupExecutor`` on top, with the dataflow
+placement -> balance -> executor: a ``PlacementMap`` bounds where each
+shard may run (primary residency + live ring replicas), the optional
+``runtime/balance`` layer picks where it should (cost-aware shedding
+from hot hosts onto replicas, fed by the per-host realized wall times
+this layer reports via ``last_job``), and one ``ShardTaskExecutor``
+per host runs its group (per-host warm pool, per-host retry and
+speculation) before a cross-host gather merges the per-shard results.
 Failure injection for tests is via ``fault_hook`` which may raise on
 chosen shards (host-granularity injection lives on the placement
 layer).

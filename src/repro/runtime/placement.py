@@ -48,11 +48,29 @@ lifted to host granularity (a requeued shard re-runs all of its
 queries).  A shard whose primary and replicas are all dead raises
 ``HostFailure``.
 
+**Load balancing** (``balanced=True``): the residency split is
+primary-only and therefore bounded by the slowest host — skewed phi
+concentrates sampled shards on a few hot hosts.  With a balancer the
+dataflow becomes placement -> balance -> executor: ``PlacementMap``
+says who *can* run a shard (primary + live ring replicas),
+``runtime.balance.plan_split`` says who *should* (greedy LPT over a
+per-host EWMA cost model fed by realized host-group wall times, with a
+hysteresis band so stable loads don't flap), and the per-host
+``ShardTaskExecutor`` fleet actually runs the groups.  Shed shards
+land only on replicas that hold them, so every scan stays local, and
+the cross-host gather is unchanged — balanced results are bit-for-bit
+the single-executor results.  Failover and balancing are one code
+path (``_split``): a dead host is an infinitely-hot one.
+
 Telemetry is a per-host aggregate: ``last_job`` carries the job's
 critical-path wall time (what the window controller attributes to the
-shared scan), total task count, and the per-host breakdown;
+shared scan), total task count, and the per-host breakdown (realized
+wall per host, including any injected degradation);
 ``stats["scans_per_host"]`` counts shard visits per host, which the
-serving bench checks against the residency split of the union plan.
+serving bench checks against the residency split of the union plan
+(primary-only executors — a balanced executor deliberately deviates
+from residency counts, and its audit lives in
+``last_job["balance"]``).
 """
 from __future__ import annotations
 
@@ -64,6 +82,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.runtime.balance import BalanceAudit, HostLoadModel, plan_split
 from repro.runtime.executor import (
     ShardTaskExecutor,
     invert_plan,
@@ -179,13 +198,26 @@ class PlacementMap:
         return np.nonzero(self.primary == int(host))[0].astype(np.int64)
 
     def split(self, shard_ids: Sequence[int],
-              dead: frozenset = frozenset()) -> Dict[int, List[int]]:
+              dead: frozenset = frozenset(), *,
+              load=None,
+              hysteresis: Optional[float] = None) -> Dict[int, List[int]]:
         """Partition shard ids into per-host groups by residency.
 
-        Each shard goes to its primary host, or — when the primary is
-        in ``dead`` — to its first live replica (failover order).
-        Raises ``HostFailure`` for a shard with no live host.  Group
-        lists preserve the input order (determinism for tests)."""
+        Primary-only (``load=None``): each shard goes to its primary
+        host, or — when the primary is in ``dead`` — to its first live
+        replica (failover order).  Cost-aware (``load`` a
+        ``runtime.balance.HostLoadModel``): the residency split is the
+        starting point, but shards shed from estimated-hot hosts onto
+        their live replicas when the balanced assignment beats the
+        residency makespan by more than the ``hysteresis`` band (see
+        ``runtime.balance.plan_split`` — a dead host is just an
+        infinitely-hot one, so failover is the degenerate case of
+        balancing).  Either way every shard lands on a host that holds
+        it; raises ``HostFailure`` for a shard with no live host.
+        Group lists preserve the input order (determinism for tests)."""
+        if load is not None:
+            return plan_split(self, shard_ids, load, dead=dead,
+                              hysteresis=hysteresis).groups
         groups: Dict[int, List[int]] = {}
         for sid in shard_ids:
             sid = int(sid)
@@ -212,9 +244,22 @@ class HostGroupExecutor:
     same-machine comparison); remaining keyword arguments are forwarded
     to every per-host ``ShardTaskExecutor`` (``fault_hook``,
     ``max_retries``, ``adaptive_workers``, ...).  ``host_fault_hook``
-    is the *host*-granularity failure injection: called as
+    is the *host*-granularity injection point: called as
     ``(host, shard_ids)`` before the host's scan; raising kills the
-    whole host for the current job and triggers replica requeue."""
+    whole host for the current job and triggers replica requeue, while
+    a hook that merely sleeps simulates a degraded (hot) host — the
+    delay lands in the host's wall-time telemetry, which is how the
+    bench and tests exercise the balancer.
+
+    ``balanced=True`` (or an explicit ``balancer=HostLoadModel(...)``)
+    turns on replica-aware load balancing: every split goes through
+    ``runtime.balance.plan_split`` fed by the per-host realized wall
+    times of completed host groups, so estimated-hot hosts shed whole
+    shard groups onto their live ring replicas (residency preserved —
+    shed scans stay local).  The requeue path uses the same balancer
+    split with the dead set grown, unifying failover and balancing;
+    ``last_job["balance"]`` records the decision (estimated vs
+    realized per-host makespan, shed count) for audit."""
 
     def __init__(
         self,
@@ -222,17 +267,22 @@ class HostGroupExecutor:
         *,
         workers_per_host: int = 2,
         host_fault_hook: Optional[Callable[[int, Sequence[int]], None]] = None,
+        balanced: bool = False,
+        balancer: Optional["HostLoadModel"] = None,
         **executor_kw: Any,
     ):
         self.placement = placement
         self.host_fault_hook = host_fault_hook
+        if balanced and balancer is None:
+            balancer = HostLoadModel(placement.n_hosts)
+        self.balancer = balancer
         self.hosts: Dict[int, ShardTaskExecutor] = {
             h: ShardTaskExecutor(workers=workers_per_host, **executor_kw)
             for h in range(placement.n_hosts)
         }
         self.stats: Dict[str, Any] = {
             "jobs": 0, "host_jobs": 0, "host_failures": 0,
-            "requeued_shards": 0,
+            "requeued_shards": 0, "shed_shards": 0,
             "scans_per_host": [0] * placement.n_hosts,
         }
         self.last_job: Optional[Dict[str, Any]] = None
@@ -270,10 +320,33 @@ class HostGroupExecutor:
     # execution
     # ------------------------------------------------------------------
     def _run_host(self, host: int, corpus, shard_ids: List[int],
-                  fn: Callable[[Any], Any]) -> Dict[int, Any]:
+                  fn: Callable[[Any], Any]) -> Tuple[Dict[int, Any], float]:
+        """One host group: returns (results, realized wall seconds).
+        The wall clock covers the injection hook too, so a simulated
+        degraded host is *observed* as slow by the balancer."""
+        t0 = time.perf_counter()
         if self.host_fault_hook is not None:
             self.host_fault_hook(host, shard_ids)
-        return self.hosts[host].map_shards(corpus, shard_ids, fn)
+        res = self.hosts[host].map_shards(corpus, shard_ids, fn)
+        return res, time.perf_counter() - t0
+
+    def _split(self, shard_ids: Sequence[int], dead: frozenset,
+               requeue: bool = False) -> Tuple[Dict[int, List[int]],
+                                               Optional[BalanceAudit]]:
+        """The one split point for both the initial plan and the
+        failure requeue: primary residency without a balancer,
+        cost-aware shedding with one (a dead host is just an
+        infinitely-hot host, so failover rides the same path).  A
+        requeue round is read-only on the balancer: the dead host's
+        small group must not flip the hysteresis state or inflate the
+        planned-shed stat."""
+        if self.balancer is None:
+            return self.placement.split(shard_ids, dead), None
+        audit = plan_split(self.placement, shard_ids, self.balancer,
+                           dead=dead, update_state=not requeue)
+        if not requeue:
+            self.stats["shed_shards"] += audit.shed
+        return audit.groups, audit
 
     def map_shards(
         self,
@@ -290,15 +363,16 @@ class HostGroupExecutor:
         ids = [int(s) for s in shard_ids]
         t_job = time.perf_counter()
         dead: set = set()
-        pending = self.placement.split(ids)
+        pending, audit = self._split(ids, frozenset())
         results: Dict[int, Any] = {}
         per_host: Dict[int, Dict[str, float]] = {}
+        realized: Dict[int, int] = {}
         failed: Dict[int, List[int]] = {}
         errors: Dict[int, BaseException] = {}
 
         def collect(h: int, group: List[int], run) -> None:
             try:
-                host_res = run()
+                host_res, wall = run()
             except Exception as exc:
                 # the host is dead for the rest of this job: its shard
                 # group moves wholesale to replica hosts.  The cause is
@@ -314,7 +388,16 @@ class HostGroupExecutor:
             results.update(host_res)
             self.stats["host_jobs"] += 1
             self.stats["scans_per_host"][h] += len(host_res)
-            per_host[h] = dict(self.hosts[h].last_job or {})
+            realized[h] = realized.get(h, 0) + len(host_res)
+            job = dict(self.hosts[h].last_job or {})
+            # realized wall includes the injection hook — the cost the
+            # balancer must learn is the host's, not just its pool's —
+            # and *accumulates* over rounds: a host that ran its own
+            # group and then absorbed a requeued one spent both walls
+            job["wall_s"] = wall + per_host.get(h, {}).get("wall_s", 0.0)
+            per_host[h] = job
+            if self.balancer is not None and host_res:
+                self.balancer.observe(h, wall, len(host_res))
 
         while pending:
             items = list(pending.items())
@@ -337,8 +420,8 @@ class HostGroupExecutor:
                            for sid in group]
                 self.stats["requeued_shards"] += len(requeue)
                 try:
-                    pending = self.placement.split(requeue,
-                                                   frozenset(dead))
+                    pending, _ = self._split(requeue, frozenset(dead),
+                                             requeue=True)
                 except HostFailure as hf:
                     # no live replica left: chain the underlying host
                     # exception (the orphaned shard's own host if we
@@ -352,6 +435,7 @@ class HostGroupExecutor:
         self.stats["jobs"] += 1
         medians = [j["median_task_s"] for j in per_host.values()
                    if j.get("median_task_s")]
+        walls = {h: j.get("wall_s", 0.0) for h, j in per_host.items()}
         self.last_job = {
             # hosts run concurrently, so the job's service time is the
             # coordinator's critical path (incl. the gather) — this is
@@ -360,9 +444,18 @@ class HostGroupExecutor:
             "tasks": float(len(ids)),
             "median_task_s": float(np.median(medians)) if medians else 0.0,
             "hosts": float(len(per_host)),
-            "per_host_wall_s": {h: j.get("wall_s", 0.0)
-                                for h, j in per_host.items()},
+            "per_host_wall_s": walls,
         }
+        if audit is not None:
+            # estimated (at split time) vs realized (measured) per-host
+            # makespans, for the bench's run-over-run balance audit
+            rec = audit.record()
+            rec["realized_wall_s"] = [
+                walls.get(h, 0.0) for h in range(self.placement.n_hosts)]
+            rec["realized_group_sizes"] = [
+                realized.get(h, 0) for h in range(self.placement.n_hosts)]
+            rec["realized_makespan_s"] = max(walls.values(), default=0.0)
+            self.last_job["balance"] = rec
         return results
 
     def map_shard_batch(

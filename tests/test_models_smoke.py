@@ -111,9 +111,10 @@ def test_decode_matches_forward(arch):
     assert np.max(np.abs(np.asarray(dec) - full[:, -1])) / scale < 5e-3
 
 
+@pytest.mark.slow
 def test_sliding_window_ring_buffer():
     """Hymba ring cache: decoding past the window stays consistent with
-    a windowed full forward."""
+    a windowed full forward (~20 s: 20 per-token decode_step compiles)."""
     cfg = dataclasses.replace(get_config("hymba_1_5b", smoke=True),
                               dtypes=FP32)
     # tiny window so we wrap quickly
