@@ -155,7 +155,7 @@ def serve_section(serve: Dict) -> str:
     load_sweep / placement / balance records + speedup scalars; any
     record kind without a renderer still prints a one-line summary
     (nothing in the JSON is dropped on the floor)."""
-    rendered = {"config", "load_sweep", "placement", "balance"}
+    rendered = {"config", "load_sweep", "placement", "balance", "budget"}
     lines = ["## §Serving", ""]
     cfg = serve.get("config", {})
     if cfg:
@@ -184,10 +184,19 @@ def serve_section(serve: Dict) -> str:
 
     sweep = serve.get("load_sweep")
     if sweep:
-        lines += ["### Load sweep (static vs adaptive window)", "",
+        lines += ["### Load sweep (static vs adaptive vs budget window)",
+                  "",
                   "| load | mode | target q/s | served q/s | p50 ms | "
-                  "p99 ms | mean batch |",
-                  "|---|---|---|---|---|---|---|"]
+                  "p99 ms | mean batch | shed | degraded | p90 rel err |",
+                  "|---|---|---|---|---|---|---|---|---|---|"]
+        def _pct(v):
+            return f"{v:.0%}" if isinstance(v, (int, float)) else "—"
+
+        def _err(v):
+            # NaN (no count queries served) renders as a dash
+            return f"{v:.2f}" if isinstance(v, (int, float)) and v == v \
+                else "—"
+
         for row in sweep:
             lines.append(
                 f"| {row['load']} | {row['mode']} | "
@@ -195,7 +204,10 @@ def serve_section(serve: Dict) -> str:
                 f"{row['served_qps']:.0f} | "
                 f"{row['p50_sojourn_ms']:.2f} | "
                 f"{row['p99_sojourn_ms']:.2f} | "
-                f"{row['mean_batch']:.1f} |")
+                f"{row['mean_batch']:.1f} | "
+                f"{_pct(row.get('shed_frac'))} | "
+                f"{_pct(row.get('degraded_frac'))} | "
+                f"{_err(row.get('p90_rel_err'))} |")
         lines.append("")
 
     pl = serve.get("placement")
@@ -254,6 +266,53 @@ def serve_section(serve: Dict) -> str:
                                             {}).items()),
             "",
         ]
+
+    bud = serve.get("budget")
+    if bud:
+        cov = bud.get("coverage", {})
+        parity = bud.get("parity", {})
+        lines += [
+            f"### Error-budgeted serving ({bud.get('hosts', '?')} hosts, "
+            f"host {bud.get('hot_host', '?')} degraded "
+            f"{bud.get('hot_delay_ms_per_shard', 0):.1f} ms/shard, "
+            f"capacity {bud.get('capacity_qps', float('nan')):.0f} q/s)",
+            "",
+            "- planner parity (budget-free queries, planner engine vs "
+            "plain): " + "; ".join(
+                f"{lbl}: " + ", ".join(f"{k}={v}" for k, v in p.items())
+                for lbl, p in parity.items()),
+        ]
+        for lbl, c in cov.items():
+            lines.append(
+                f"- {lbl} pass: count 95% CI coverage "
+                f"**{c.get('ci_coverage', float('nan')):.0%}** over "
+                f"{c.get('n_count_queries', '?')} queries, p90 realized "
+                f"rel err {c.get('p90_rel_err', float('nan')):.2f}")
+        for lbl in ("planned", "degraded"):
+            a = bud.get(f"{lbl}_audit") or {}
+            if a:
+                lines.append(
+                    f"- {lbl} audit: pressure {a.get('pressure', 0):.2f}, "
+                    f"{a.get('degraded', 0)}/{a.get('budgeted', 0)} "
+                    f"queries degraded, {a.get('at_floor', 0)} at floor")
+        ov = bud.get("overload", {})
+        if ov:
+            lines += ["", "| overload arm | offered q/s | served q/s | "
+                      "shed | degraded | mean batch | p99 ms | "
+                      "CI coverage |",
+                      "|---|---|---|---|---|---|---|---|"]
+            for mode, arm in ov.items():
+                covs = arm.get("ci_coverage")
+                lines.append(
+                    f"| {mode} | {arm['offered_qps']:.0f} | "
+                    f"{arm['served_qps']:.0f} | "
+                    f"{arm['shed']}/{arm['shed'] + arm['served']} | "
+                    f"{arm['degraded_frac']:.0%} | "
+                    f"{arm['mean_batch']:.1f} | "
+                    f"{arm['p99_sojourn_ms']:.0f} | "
+                    + (f"{covs:.0%} |" if isinstance(covs, (int, float))
+                       and covs == covs else "— |"))
+        lines.append("")
 
     unknown = [k for k in serve if k not in rendered]
     for k in unknown:

@@ -67,6 +67,27 @@ same mixed workload (aggregation / Boolean / ranked, paper Table I):
                     identically, and (c) the balanced split reduces
                     the mean job makespan vs the primary-only split
                     under the same hot host
+  batched_budget  - the error-budgeted engine: every query carries a
+                    ``QueryBudget`` (error / latency SLOs), a
+                    ``RatePlanner`` picks its per-query sampling rate,
+                    and Boolean/ranked results gain bootstrap CIs.
+                    The row prices budget planning + per-result CIs on
+                    the batched hot path; it is floored by the
+                    regression gate.  Alongside it (whenever
+                    ``--hosts`` is active) a ``budget`` record runs
+                    three *hard checks*: (1) a planner-bearing engine
+                    serving unbudgeted queries is bit-for-bit the
+                    plain engine, at the nominal rate and at the
+                    precise rate-1.0 fast path; (2) on a deterministic
+                    untimed pass (pinned rng, pressure 0 and fully
+                    degraded) the count queries' 95% CIs cover the
+                    exact full-scan answer for >= 90% of queries;
+                    (3) under ~3x-capacity Poisson arrivals with the
+                    hot host, the budget-aware window (degradation
+                    ladder on) sheds strictly fewer queries than the
+                    static-backpressure baseline on the same arrival
+                    schedule and queue bound — and the baseline must
+                    itself shed, or the arm failed to overload
 
 Each mode runs ``trials`` times and the best wall time is reported
 (the container CPU is shared; best-of filters scheduler noise).
@@ -83,13 +104,17 @@ comparable from PR 3 onward.
 ``--sweep`` additionally drives a *load sweep*: Poisson arrivals
 (exponential gaps, TextBenDS-style throughput emulation) at several
 rates spanning light load to past dispatcher capacity, each served
-twice — through the static (2 ms, fixed-size) window and through the
-adaptive ``WindowController`` window — and records per-rate
-static-vs-adaptive p50/p99 sojourn rows under ``load_sweep`` in the
-JSON.  The adaptive window must be no worse at both ends: at light
-load it collapses the deadline (a lone query stops waiting out 2 ms),
-at heavy load it grows the batch (amortization is what keeps the
-dispatcher stable).
+three ways — the static (2 ms, fixed-size) window, the adaptive
+``WindowController`` window, and the error-budgeted engine behind an
+adaptive window with a bounded queue — and records per-rate p50/p99
+sojourn rows under ``load_sweep`` in the JSON, each row carrying the
+fraction of queries shed vs served degraded and the realized p90
+relative error of its count queries against exact answers.  The
+adaptive window must be no worse at both ends: at light load it
+collapses the deadline (a lone query stops waiting out 2 ms), at heavy
+load it grows the batch (amortization is what keeps the dispatcher
+stable); the budget mode is where overload walks the
+degrade-before-shed ladder instead of queueing without bound.
 
   PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--sweep]
 
@@ -219,9 +244,11 @@ def _run_per_query_scan(corpus, index, queries, rate, executor, seed):
     return lat
 
 
-def _run_batched(corpus, index, queries, rate, executor, seed, batch_size):
+def _run_batched(corpus, index, queries, rate, executor, seed, batch_size,
+                 engine=None):
     from repro.core.queries import QueryBatch
-    engine = QueryBatch(corpus, index, executor=executor)
+    if engine is None:
+        engine = QueryBatch(corpus, index, executor=executor)
     rng = np.random.default_rng(seed)
     lat = []
     for i in range(0, len(queries), batch_size):
@@ -264,28 +291,43 @@ def _run_windowed(corpus, index, queries, rate, executor, seed, batch_size,
 
 def _run_paced_window(corpus, index, queries, rate, executor, seed,
                       arrival_qps, *, adaptive, static_delay_s,
-                      static_batch, max_batch_bound):
+                      static_batch, max_batch_bound, max_pending=None,
+                      budget=False):
     """One load-sweep arm: Poisson arrivals at ``arrival_qps`` through a
     static or adaptive window; returns (sojourns, realized_qps, stats,
-    mean_batch)."""
+    mean_batch, extras).
+
+    With ``max_pending`` the submit loop is *shed-tolerant*: a
+    ``Backpressure`` drops that query on the floor (the open-loop source
+    does not retry — offered load is the experiment variable) and the
+    query's slot in ``extras['results']`` stays ``None``.  With
+    ``budget=True`` the engine carries a ``RatePlanner`` wired to the
+    window's controller (``ci=True``), so queries with ``QueryBudget``s
+    plan their own rates and overload degrades before it sheds."""
     from repro.core.queries import QueryBatch
-    from repro.runtime import BatchWindow, ControllerConfig, WindowController
-    engine = QueryBatch(corpus, index, executor=executor)
+    from repro.runtime import (Backpressure, BatchWindow, ControllerConfig,
+                               RatePlanner, WindowController)
     controller = None
-    if adaptive:
+    if adaptive or budget:
         controller = WindowController(ControllerConfig(
             min_delay_s=1e-4, max_delay_s=0.02,
             min_batch=1, max_batch=max_batch_bound))
+    planner = (RatePlanner(corpus.n_shards, controller=controller)
+               if budget else None)
+    engine = QueryBatch(corpus, index, executor=executor,
+                        planner=planner, ci=budget)
     window = BatchWindow(engine, rate,
-                         max_batch=(max_batch_bound if adaptive
+                         max_batch=(max_batch_bound if adaptive or budget
                                     else static_batch),
                          max_delay_s=static_delay_s,
                          controller=controller,
+                         max_pending=max_pending,
                          rng=np.random.default_rng(seed))
     gap_rng = np.random.default_rng(seed + 7)
     n = len(queries)
     submit_at = [None] * n
     done_at = [None] * n
+    retry_hints = []
 
     def on_done(i):
         def cb(_fut):
@@ -293,12 +335,17 @@ def _run_paced_window(corpus, index, queries, rate, executor, seed,
         return cb
 
     t0 = time.perf_counter()
-    futs = []
+    futs = [None] * n
     for i, q in enumerate(queries):
         submit_at[i] = time.perf_counter()
-        fut = window.submit(q)
-        fut.add_done_callback(on_done(i))
-        futs.append(fut)
+        try:
+            fut = window.submit(q)
+        except Backpressure as bp:
+            if bp.retry_after_s is not None:
+                retry_hints.append(bp.retry_after_s)
+        else:
+            fut.add_done_callback(on_done(i))
+            futs[i] = fut
         gap = gap_rng.exponential(1.0 / arrival_qps)
         # spin for sub-ms gaps: time.sleep() overshoots by ~100 us,
         # which at heavy load would silently throttle the target rate
@@ -308,13 +355,21 @@ def _run_paced_window(corpus, index, queries, rate, executor, seed,
             t_next = submit_at[i] + gap
             while time.perf_counter() < t_next:
                 pass
-    for f in futs:
-        f.result()
+    results = [f.result() if f is not None else None for f in futs]
     wall = time.perf_counter() - t0
     window.close()
-    sojourns = np.asarray([d - s for s, d in zip(submit_at, done_at)])
+    served = [i for i, f in enumerate(futs) if f is not None]
+    sojourns = np.asarray([done_at[i] - submit_at[i] for i in served]
+                          or [0.0])
     batches = max(window.stats["batches"], 1)
-    return sojourns, n / wall, dict(window.stats), n / batches
+    extras = dict(offered=n, served=len(served),
+                  shed=window.stats["shed"],
+                  escalated=window.stats["escalated"],
+                  degraded=window.stats["degraded"],
+                  retry_hints=retry_hints, results=results,
+                  last_budget=window.last_budget)
+    return (sojourns, len(served) / wall, dict(window.stats),
+            len(served) / batches, extras)
 
 
 def _result_matches(q, got, want) -> bool:
@@ -454,6 +509,185 @@ def _balance_report(corpus, index, queries, rate, executor, n_hosts,
     return record
 
 
+def _budgeted_queries(queries, floor_rate=0.1):
+    """The same mixed workload with per-query SLOs attached: counts ask
+    for a relative-error budget (the closed-form Eq-2 inversion), bools
+    a looser one (bootstrap CI width), ranked a latency budget with an
+    error cap (best accuracy that fits ~50 ms p99).  ``floor_rate`` is
+    every query's graceful-degradation floor."""
+    import dataclasses as _dc
+
+    from repro.runtime import QueryBudget
+    out = []
+    for q in queries:
+        if q.kind == "count":
+            b = QueryBudget(max_rel_error=0.5, floor_rate=floor_rate)
+        elif q.kind == "bool":
+            b = QueryBudget(max_rel_error=0.6, floor_rate=floor_rate)
+        else:
+            b = QueryBudget(max_rel_error=0.6, max_latency_s=0.05,
+                            floor_rate=floor_rate)
+        out.append(_dc.replace(q, budget=b))
+    return out
+
+
+def _count_err_stats(queries, results, truths):
+    """(p90 relative error, CI-coverage fraction) of the served count
+    queries in ``results`` (``None`` slots are shed) against the exact
+    full-scan ``truths``."""
+    errs, covered, total = [], 0, 0
+    for q, res, truth in zip(queries, results, truths):
+        if q.kind != "count" or res is None:
+            continue
+        total += 1
+        if res.estimate.covers(truth):
+            covered += 1
+        if truth:
+            errs.append(abs(res.estimate.value - truth) / truth)
+    p90 = float(np.percentile(errs, 90)) if errs else 0.0
+    return p90, (covered / total if total else 1.0), total
+
+
+def _budget_report(corpus, index, queries, rate, executor, n_hosts,
+                   workers, batch_size) -> dict:
+    """The error-budgeted-serving record — three hard gates (this runs
+    under the CI smoke job):
+
+      1. *Parity*: a planner-bearing engine serving UNBUDGETED queries
+         must be bit-for-bit the plain engine, at the nominal rate and
+         at the precise rate-1.0 fast path.
+      2. *Calibration*: with budgets attached, the count queries' 95%
+         CIs must cover the exact full-scan answer for >= 90% of
+         queries — measured on a deterministic untimed pass (pinned
+         rng, pressure 0 and pressure 1), not inside the
+         timing-dependent overload arm.
+      3. *Degrade-before-shed*: under ~3x-capacity Poisson arrivals on
+         a 2-host topology with a hot host, the budget-aware window
+         (degradation ladder on) must shed strictly fewer queries than
+         the PR 3-style static-backpressure baseline under the same
+         arrival schedule and queue bound (and the baseline must
+         actually shed, or the arm failed to overload).
+    """
+    from repro.core.queries import QueryBatch
+    from repro.runtime import (HostGroupExecutor, PlacementMap, RatePlanner,
+                               WindowController)
+    plain = QueryBatch(corpus, index, executor=executor)
+    budgeted = _budgeted_queries(queries)
+
+    # -- gate 1: unbudgeted parity through the planner ----------------
+    planner_engine = QueryBatch(corpus, index, executor=executor,
+                                planner=RatePlanner(corpus.n_shards),
+                                ci=True)
+    parity = {}
+    for label, r in (("nominal", rate), ("precise", 1.0)):
+        got = planner_engine.execute(queries, r,
+                                     rng=np.random.default_rng(31))
+        want = plain.execute(queries, r, rng=np.random.default_rng(31))
+        parity[label] = _gather_parity(queries, got, want)
+        if not all(parity[label].values()):
+            raise RuntimeError(
+                f"planner engine diverged from the plain engine on "
+                f"unbudgeted queries at {label} rate: {parity[label]}")
+
+    # -- gate 2: count-CI coverage, deterministic pass ----------------
+    truths = [res.estimate.value if q.kind == "count" else None
+              for q, res in zip(queries, plain.execute(
+                  queries, 1.0, rng=np.random.default_rng(32)))]
+    # warm the planner's error curves off served unbudgeted batches so
+    # the budgeted pass plans from fitted dispersion, not the
+    # pessimistic cold seed (which would plan a census and make the
+    # coverage check vacuous)
+    for s in (33, 34):
+        planner_engine.execute(queries, rate, rng=np.random.default_rng(s))
+    coverage = {}
+    audits = {}
+    for label, pressure, seeds in (("planned", 0.0, (40, 41)),
+                                   ("degraded", 1.0, (42, 43))):
+        res_all, q_all, t_all = [], [], []
+        for s in seeds:
+            res_all.extend(planner_engine.execute(
+                budgeted, rate, rng=np.random.default_rng(s),
+                pressure=pressure))
+            q_all.extend(budgeted)
+            t_all.extend(truths)
+        p90, cov, n_counts = _count_err_stats(q_all, res_all, t_all)
+        coverage[label] = dict(ci_coverage=cov, p90_rel_err=p90,
+                               n_count_queries=n_counts)
+        audits[label] = planner_engine.last_budget
+    for label in ("planned", "degraded"):
+        if coverage[label]["ci_coverage"] < 0.9:
+            raise RuntimeError(
+                f"count 95% CIs cover the exact answer for only "
+                f"{coverage[label]['ci_coverage']:.0%} of queries on the "
+                f"{label} pass (floor 90%)")
+
+    # -- gate 3: overload — static shedding vs degrade-first ----------
+    wph = max(1, workers // n_hosts)
+
+    def hot_exec():
+        return HostGroupExecutor(
+            PlacementMap.blocked(corpus.n_shards, n_hosts, n_replicas=1),
+            workers_per_host=wph, host_fault_hook=_hot_host_hook)
+
+    # capacity probe at the static arm's operating point (hot host
+    # included): one warmed batch through a plain engine
+    probe_exec = hot_exec()
+    probe_engine = QueryBatch(corpus, index, executor=probe_exec)
+    probe = budgeted[:batch_size]
+    probe_engine.execute(probe, rate, rng=np.random.default_rng(50))
+    t0 = time.perf_counter()
+    probe_engine.execute(probe, rate, rng=np.random.default_rng(51))
+    capacity_qps = len(probe) / (time.perf_counter() - t0)
+    probe_exec.close()
+    offered = 3.0 * capacity_qps
+    overload_queries = (budgeted * ((10 * batch_size) // len(budgeted) + 1)
+                        )[:10 * batch_size]
+
+    arms = {}
+    for mode, is_budget in (("static", False), ("budget", True)):
+        ex = hot_exec()
+        sojourns, served_qps, stats, mean_batch, extras = _run_paced_window(
+            corpus, index, overload_queries, rate, ex, seed=60,
+            arrival_qps=offered, adaptive=is_budget,
+            static_delay_s=0.002, static_batch=batch_size,
+            max_batch_bound=8 * batch_size, max_pending=4 * batch_size,
+            budget=is_budget)
+        ex.close()
+        p90, cov, n_counts = _count_err_stats(
+            overload_queries, extras["results"],
+            (truths * ((10 * batch_size) // len(truths) + 1)
+             )[:10 * batch_size])
+        arms[mode] = dict(
+            offered_qps=offered, served_qps=served_qps,
+            shed=extras["shed"], served=extras["served"],
+            shed_frac=extras["shed"] / extras["offered"],
+            degraded_frac=extras["degraded"] / max(extras["served"], 1),
+            escalated=extras["escalated"],
+            p99_sojourn_ms=float(np.percentile(sojourns, 99)) * 1e3,
+            mean_batch=mean_batch,
+            p90_rel_err=p90, ci_coverage=cov,
+            mean_retry_after_ms=(float(np.mean(extras["retry_hints"]))
+                                 * 1e3 if extras["retry_hints"] else None),
+            last_budget=extras["last_budget"])
+    if arms["static"]["shed"] == 0:
+        raise RuntimeError(
+            "overload arm failed to overload: the static-backpressure "
+            f"baseline shed nothing at {offered:.0f} q/s offered")
+    if arms["budget"]["shed"] >= arms["static"]["shed"]:
+        raise RuntimeError(
+            f"budget-aware serving did not shed strictly fewer than the "
+            f"static baseline: {arms['budget']['shed']} >= "
+            f"{arms['static']['shed']}")
+
+    return dict(
+        hosts=n_hosts, hot_host=0,
+        hot_delay_ms_per_shard=HOT_HOST_DELAY_S * 1e3,
+        capacity_qps=capacity_qps,
+        parity=parity, coverage=coverage,
+        planned_audit=audits["planned"], degraded_audit=audits["degraded"],
+        overload=arms)
+
+
 def run_sweep(corpus, index, queries, rate, executor, batch_size) -> list:
     """Static-vs-adaptive window sojourn across arrival rates.
 
@@ -464,7 +698,15 @@ def run_sweep(corpus, index, queries, rate, executor, batch_size) -> list:
     there; the wide margin matters because paced-serving cost runs
     several times the back-to-back probe estimate), and the mid/heavy
     ends drive 0.5x / 1.5x / 3x the *batched* dispatcher capacity
-    (where amortization is what keeps the dispatcher stable)."""
+    (where amortization is what keeps the dispatcher stable).
+
+    Three modes per load level: ``static`` and ``adaptive`` windows
+    serving the unbudgeted stream (unbounded queue, as before), and
+    ``budget`` — the error-budgeted engine behind an adaptive window
+    with a bounded queue, so overload exercises the degrade-then-shed
+    ladder.  Every row reports the fraction of queries shed vs served
+    degraded and the realized p90 relative error of its count queries
+    against exact full-scan answers."""
     from repro.core.queries import QueryBatch
     engine = QueryBatch(corpus, index, executor=executor)
     probe = queries[:batch_size]
@@ -476,33 +718,51 @@ def run_sweep(corpus, index, queries, rate, executor, batch_size) -> list:
     for i in range(4):
         engine.execute(queries[i:i + 1], rate, rng=np.random.default_rng(7))
     single_qps = 4 / (time.perf_counter() - t0)
+    truths = [res.estimate.value if q.kind == "count" else None
+              for q, res in zip(queries, engine.execute(
+                  queries, 1.0, rng=np.random.default_rng(8)))]
     # percentile stability: each arm serves ~5 windows' worth of queries
-    sweep_queries = (queries * ((5 * batch_size) // len(queries) + 1)
-                     )[:5 * batch_size]
+    reps = (5 * batch_size) // len(queries) + 1
+    sweep_queries = (queries * reps)[:5 * batch_size]
+    budget_queries = (_budgeted_queries(queries) * reps)[:5 * batch_size]
+    sweep_truths = (truths * reps)[:5 * batch_size]
     arms = [("light", 0.1 * single_qps), ("mid", 0.5 * capacity_qps),
             ("heavy", 1.5 * capacity_qps), ("overload", 3.0 * capacity_qps)]
     rows = []
     for li, (label, arrival_qps) in enumerate(arms):
         arrival_qps = max(arrival_qps, 1.0)
-        for mode in ("static", "adaptive"):
+        for mode in ("static", "adaptive", "budget"):
+            is_budget = mode == "budget"
             # best-of-3 on p99, same reason the throughput arms take
             # best-of wall time: one scheduler stall in the shared
             # container lands in somebody's tail
             row = None
             for trial in range(3):
-                sojourns, realized, stats, mean_batch = _run_paced_window(
-                    corpus, index, sweep_queries, rate, executor,
-                    seed=10 + li + 100 * trial, arrival_qps=arrival_qps,
-                    adaptive=(mode == "adaptive"),
-                    static_delay_s=0.002, static_batch=batch_size,
-                    max_batch_bound=4 * batch_size)
+                sojourns, realized, stats, mean_batch, extras = \
+                    _run_paced_window(
+                        corpus, index,
+                        budget_queries if is_budget else sweep_queries,
+                        rate, executor,
+                        seed=10 + li + 100 * trial, arrival_qps=arrival_qps,
+                        adaptive=(mode == "adaptive"),
+                        static_delay_s=0.002, static_batch=batch_size,
+                        max_batch_bound=4 * batch_size,
+                        max_pending=(2 * batch_size if is_budget else None),
+                        budget=is_budget)
+                p90, _, _ = _count_err_stats(
+                    budget_queries if is_budget else sweep_queries,
+                    extras["results"], sweep_truths)
                 cand = dict(
                     load=label, mode=mode,
                     arrival_qps_target=arrival_qps,
                     served_qps=realized,
                     p50_sojourn_ms=float(np.percentile(sojourns, 50)) * 1e3,
                     p99_sojourn_ms=float(np.percentile(sojourns, 99)) * 1e3,
-                    windows=stats["batches"], mean_batch=mean_batch)
+                    windows=stats["batches"], mean_batch=mean_batch,
+                    shed_frac=extras["shed"] / extras["offered"],
+                    degraded_frac=(extras["degraded"]
+                                   / max(extras["served"], 1)),
+                    p90_rel_err=p90)
                 if row is None or cand["p99_sojourn_ms"] < row["p99_sojourn_ms"]:
                     row = cand
             rows.append(row)
@@ -557,6 +817,19 @@ def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
         "windowed": lambda seed: _run_windowed(
             corpus, index, queries, rate, executor, seed, batch_size),
     }
+    # the error-budgeted engine: per-query SLOs through a RatePlanner,
+    # bootstrap CIs on (one engine reused across trials, like the
+    # balanced arm, so the warm pass is where the error curves fit and
+    # measured trials run the learned plans)
+    from repro.core.queries import QueryBatch
+    from repro.runtime import RatePlanner
+    budget_engine = QueryBatch(corpus, index, executor=executor,
+                               planner=RatePlanner(corpus.n_shards),
+                               ci=True)
+    budget_queries = _budgeted_queries(queries)
+    arms["batched_budget"] = lambda seed: _run_batched(
+        corpus, index, budget_queries, rate, executor, seed, batch_size,
+        engine=budget_engine)
     host_exec = lb_exec = None
     if hosts >= 2:
         from repro.runtime import HostGroupExecutor, PlacementMap
@@ -629,6 +902,14 @@ def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
                     f"makespan {report['balance']['makespan_reduction']:.2f}x"
                     f" down, shed {report['balance']['shed_shards']}")
             lb_exec.close()
+        report["budget"] = _budget_report(
+            corpus, index, queries, rate, executor, hosts, workers,
+            batch_size)
+        ov = report["budget"]["overload"]
+        csv_row(f"serve_budget_hosts{hosts}", 0.0,
+                f"shed static {ov['static']['shed']} -> budget "
+                f"{ov['budget']['shed']}, CI coverage "
+                f"{report['budget']['coverage']['planned']['ci_coverage']:.0%}")
 
     if sweep:
         report["load_sweep"] = run_sweep(corpus, index, queries, rate,

@@ -29,10 +29,25 @@ before each of its scans) so the shed is visible — the end-of-run
 balance line shows estimated vs realized makespan and how many scans
 moved.
 
+``--budget-err E`` (and/or ``--budget-latency-ms L``) switches to
+*error-budgeted serving*: every query carries a ``QueryBudget``
+(relative error <= E at 95% confidence; p99 sojourn <= L ms;
+degradation floor ``--budget-floor``), a ``RatePlanner`` wired to the
+window controller inverts the paper's variance model to pick each
+query's own sampling rate, and results come back with confidence
+intervals (``ci=True``).  The precise reference pass always runs
+through a plain engine so the accuracy lines compare against exact
+answers.  Shed submits honor the ``Backpressure.retry_after_s`` hint
+(back off one serving cycle instead of hot-retrying), and the
+end-of-run budget line prints the planner's audit: planned vs realized
+rates, degradation pressure, CI coverage of the exact counts.
+
     PYTHONPATH=src python examples/serve_queries.py [--queries 48]
         [--hosts 2] [--replicas 1] [--hot-host-ms 2] [--no-balance]
+        [--budget-err 0.5] [--budget-latency-ms 50]
 """
 import argparse
+import dataclasses
 import os
 import sys
 import time
@@ -73,7 +88,20 @@ def main():
     ap.add_argument("--max-pending", type=int, default=None,
                     help="pending-queue bound; submits shed with "
                          "Backpressure beyond it (default 8x batch)")
+    ap.add_argument("--budget-err", type=float, default=None,
+                    help="per-query error budget: max relative error "
+                         "at 95%% confidence (e.g. 0.5); attaches a "
+                         "RatePlanner and serves with CIs")
+    ap.add_argument("--budget-latency-ms", type=float, default=None,
+                    help="per-query latency budget: max estimated p99 "
+                         "sojourn (ms); caps the planned rate")
+    ap.add_argument("--budget-floor", type=float, default=0.1,
+                    help="degradation floor rate — overload may "
+                         "squeeze a budgeted query down to this rate, "
+                         "never below")
     args = ap.parse_args()
+    budget_on = (args.budget_err is not None
+                 or args.budget_latency_ms is not None)
 
     from repro.core.allocation import allocate_corpus
     from repro.core.index import build_index
@@ -84,8 +112,9 @@ def main():
     from repro.data.corpus import SyntheticCorpusConfig, generate_text_corpus
     from repro.data.store import ShardedCorpus
     from repro.runtime import (Backpressure, BatchWindow, ControllerConfig,
-                               HostGroupExecutor, PlacementMap,
-                               ShardTaskExecutor, WindowController)
+                               HostGroupExecutor, PlacementMap, QueryBudget,
+                               RatePlanner, ShardTaskExecutor,
+                               WindowController)
 
     print("== offline index build ==")
     ccfg = SyntheticCorpusConfig(n_docs=2400, vocab_size=4096, n_topics=16)
@@ -152,7 +181,10 @@ def main():
         else:
             queries.append(BatchQuery.ranked(words.tolist(), k=10))
 
-    # precise reference answers: one rate-1.0 batch = one full shared scan
+    # precise reference answers: one rate-1.0 batch = one full shared
+    # scan, always through the plain engine — in budget mode the
+    # serving engine carries the planner, and the reference must stay
+    # exact regardless of what the planner would do to budgeted queries
     print("== precise reference pass (rate 1.0, one shared scan) ==")
     precise = engine.execute(queries, 1.0)
 
@@ -161,6 +193,21 @@ def main():
         controller = WindowController(ControllerConfig(
             min_delay_s=1e-4, max_delay_s=args.window_ms / 1e3,
             min_batch=1, max_batch=args.batch))
+    if budget_on:
+        budget = QueryBudget(
+            max_rel_error=args.budget_err,
+            max_latency_s=(args.budget_latency_ms / 1e3
+                           if args.budget_latency_ms is not None else None),
+            floor_rate=args.budget_floor)
+        queries = [dataclasses.replace(q, budget=budget) for q in queries]
+        planner = RatePlanner(corpus.n_shards, controller=controller)
+        engine = QueryBatch(corpus, index, executor=executor,
+                            planner=planner, ci=True)
+        print(f"   budgets: rel err <= {args.budget_err}"
+              + (f", p99 <= {args.budget_latency_ms:.0f} ms"
+                 if args.budget_latency_ms is not None else "")
+              + f", floor rate {args.budget_floor}; planner attached, "
+              f"results carry confidence intervals")
     max_pending = args.max_pending or 8 * args.batch
     mode = ("static window" if args.static
             else "adaptive window (p99-sojourn controller)")
@@ -184,20 +231,23 @@ def main():
         return cb
 
     t_serve = time.perf_counter()
-    futs, shed = [], 0
+    futs, shed, retry_hints = [], 0, []
     for i, q in enumerate(queries):
         t_submit[i] = time.perf_counter()
         while True:
             try:
                 fut = window.submit(q)
                 break
-            except Backpressure:
+            except Backpressure as bp:
                 # a real frontend would divert to a replica; the
-                # example backs off and retries.  The original
-                # t_submit stands — every shed-and-wait penalty is
-                # part of the query's sojourn
+                # example backs off for the controller's estimated
+                # capacity-recovery time (one serving cycle) and
+                # retries.  The original t_submit stands — every
+                # shed-and-wait penalty is part of the query's sojourn
                 shed += 1
-                time.sleep(args.window_ms / 1e3)
+                if bp.retry_after_s is not None:
+                    retry_hints.append(bp.retry_after_s)
+                time.sleep(bp.retry_after_s or args.window_ms / 1e3)
         fut.add_done_callback(on_done(i))
         futs.append(fut)
         if args.arrival_us > 0:
@@ -232,7 +282,13 @@ def main():
           f"(by size {ws['closed_by_size']}, "
           f"by deadline {ws['closed_by_deadline']}, "
           f"by flush {ws['closed_by_flush']}); "
-          f"shed by backpressure: {shed}")
+          f"shed by backpressure: {shed}"
+          + (f" (mean retry-after hint "
+             f"{1e3 * sum(retry_hints) / len(retry_hints):.1f} ms)"
+             if retry_hints else "")
+          + (f"; pressure escalations: {ws['escalated']}, "
+             f"served degraded: {ws['degraded']}"
+             if ws.get("escalated") or ws.get("degraded") else ""))
     if controller is not None and controller.current_plan is not None:
         plan = controller.current_plan
         scan = controller.scan_fraction
@@ -241,6 +297,24 @@ def main():
               f"utilization {plan.utilization:.2f}, "
               f"arrival rate {plan.arrival_rate:.0f}/s"
               + (f", scan share {scan:.0%}" if scan is not None else ""))
+    if budget_on:
+        cover, n_counts, rates = 0, 0, []
+        for q, r, ref in zip(queries, results, precise):
+            rates.append(r.achieved_rate)
+            if q.kind == "count":
+                n_counts += 1
+                cover += int(r.estimate.covers(ref.estimate.value))
+        print(f"   budget: count 95% CIs cover the exact answer "
+              f"{cover}/{n_counts}; mean achieved rate "
+              f"{np.mean(rates):.2f} (nominal {args.rate})")
+        audit = window.last_budget
+        if audit:
+            print(f"   planner audit (last window): pressure "
+                  f"{audit['pressure']:.2f}, {audit['degraded']}/"
+                  f"{audit['budgeted']} degraded, {audit['at_floor']} at "
+                  f"floor; planned rates p50 "
+                  f"{np.median(audit['planned_rates']):.2f}, realized rel "
+                  f"err p50 {np.median(audit['realized_rel_error']):.2f}")
     if args.hosts >= 2:
         retries = sum(ex.stats["retries"] for ex in executor.hosts.values())
         print(f"   injected faults survived: {faults['injected']} "

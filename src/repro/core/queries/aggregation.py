@@ -40,6 +40,12 @@ class PhraseCountResult(NamedTuple):
     def data_fraction(self) -> float:
         return self.shards_read / self.n_shards
 
+    @property
+    def achieved_rate(self) -> float:
+        """The rate actually served (after budget planning and any
+        degradation): the fraction of shards physically read."""
+        return self.data_fraction
+
 
 def phrase_count_query(
     corpus: ShardedCorpus,

@@ -36,6 +36,28 @@ sample from its own probability row (paper Eq 11), and the estimators
 consume exactly the per-shard values the single-query path would have
 produced — batching is purely an execution-layer rewrite, which is what
 the parity tests in tests/test_batch_engine.py pin down.
+
+Two serving-side extensions ride on the same machinery:
+
+  * **Per-query error/latency budgets** — construct with a
+    ``runtime.budget.RatePlanner`` and queries may carry a
+    ``QueryBudget``; ``execute``'s ``rate`` argument becomes the
+    *nominal* rate, and the planner picks each query's actual rate
+    (smallest meeting an error budget, largest fitting a latency
+    budget, degraded toward its floor under the controller's overload
+    ``pressure``).  The per-query plans were always heterogeneous-safe:
+    the shared scan unions whatever shard sets the samples produce.
+    Queries without budgets keep the nominal rate bit-for-bit,
+    including the precise rate>=1.0 fast path.
+  * **Confidence intervals on every result** — count estimates always
+    carry the closed-form Hansen-Hurwitz bound (Eq 2); with ``ci=True``
+    Boolean results gain a bootstrap-over-sampled-shards CI on the
+    result size and ranked results a bootstrap top-k stability score
+    (``core.sampling.bootstrap_estimate`` /
+    ``bootstrap_topk_stability``), so every answer ships as
+    (estimate, ci_low, ci_high, achieved_rate).  The bootstrap uses
+    its own deterministic generator — the sampling ``rng`` stream is
+    never touched, so batched-vs-single draw-order parity holds.
 """
 from __future__ import annotations
 
@@ -57,6 +79,8 @@ from repro.core.queries.retrieval import (
 from repro.core.sampling import (
     Estimate,
     SampleResult,
+    bootstrap_estimate,
+    bootstrap_topk_stability,
     ht_estimate,
     pps_sample,
     pps_sample_distinct,
@@ -73,24 +97,34 @@ from repro.data.store import (
 @dataclasses.dataclass(frozen=True)
 class BatchQuery:
     """One query in a mixed batch: an aggregation phrase count, a
-    Boolean retrieval, or a ranked (BM25 top-k) retrieval."""
+    Boolean retrieval, or a ranked (BM25 top-k) retrieval.
+
+    ``budget`` (a ``runtime.budget.QueryBudget``) declares what the
+    query may cost — an error budget, a latency budget, and a
+    degradation floor.  It only takes effect when the executing
+    ``QueryBatch`` carries a ``RatePlanner``; otherwise it is inert
+    metadata and the query runs at the batch's nominal rate."""
     kind: str                                    # "count" | "bool" | "ranked"
     phrase: Optional[Tuple[int, ...]] = None     # kind == "count"
     expr: Optional[BoolExpr] = None              # kind == "bool"
     words: Optional[Tuple[int, ...]] = None      # kind == "ranked"
     k: int = 10                                  # kind == "ranked"
+    budget: Optional[Any] = None                 # runtime.budget.QueryBudget
 
     @staticmethod
-    def count(phrase: Sequence[int]) -> "BatchQuery":
-        return BatchQuery("count", phrase=tuple(int(w) for w in phrase))
+    def count(phrase: Sequence[int], budget=None) -> "BatchQuery":
+        return BatchQuery("count", phrase=tuple(int(w) for w in phrase),
+                          budget=budget)
 
     @staticmethod
-    def boolean(expr: BoolExpr) -> "BatchQuery":
-        return BatchQuery("bool", expr=expr)
+    def boolean(expr: BoolExpr, budget=None) -> "BatchQuery":
+        return BatchQuery("bool", expr=expr, budget=budget)
 
     @staticmethod
-    def ranked(words: Sequence[int], k: int = 10) -> "BatchQuery":
-        return BatchQuery("ranked", words=tuple(int(w) for w in words), k=k)
+    def ranked(words: Sequence[int], k: int = 10,
+               budget=None) -> "BatchQuery":
+        return BatchQuery("ranked", words=tuple(int(w) for w in words),
+                          k=k, budget=budget)
 
     def word_ids(self) -> List[int]:
         """The word ids whose vectors compose this query's scoring
@@ -121,6 +155,8 @@ class QueryBatch:
         executor=None,
         method: str = "emapprox",
         confidence: float = 0.95,
+        planner=None,
+        ci: bool = False,
     ):
         if method not in ("emapprox", "srcs"):
             raise ValueError(f"unknown method {method!r}")
@@ -131,6 +167,16 @@ class QueryBatch:
         self.executor = executor
         self.method = method
         self.confidence = confidence
+        # ``planner`` (a runtime.budget.RatePlanner) turns the nominal
+        # execute() rate into per-query rates honoring each query's
+        # QueryBudget, and makes the engine accuracy-elastic under the
+        # controller's degradation pressure (accepts_pressure below)
+        self.planner = planner
+        # ``ci=True`` adds bootstrap confidence intervals to Boolean /
+        # ranked results (count bounds are closed-form and always on);
+        # off by default because the bootstrap, while cheap, is not
+        # free on the microsecond-scale serving hot path
+        self.ci = bool(ci)
         # the shard plan of the most recent execute() call (one array of
         # sampled shard ids per query) — placement-aware callers compare
         # its union's residency split against per-host scan telemetry
@@ -139,6 +185,18 @@ class QueryBatch:
         # executor is a balanced HostGroupExecutor (estimated vs
         # realized per-host makespan, shed count) — None otherwise
         self.last_audit: Optional[Dict[str, Any]] = None
+        # the budget record of the most recent execute() call, when a
+        # planner is set (planned vs realized per-query rates/errors,
+        # degradation pressure) — None otherwise
+        self.last_budget: Optional[Dict[str, Any]] = None
+
+    @property
+    def accepts_pressure(self) -> bool:
+        """Whether ``execute`` understands the ``pressure`` kwarg —
+        i.e. the engine can trade accuracy for capacity.  BatchWindow
+        checks this before forwarding the controller's degradation
+        pressure (and before preferring degradation over shedding)."""
+        return self.planner is not None
 
     # ------------------------------------------------------------------
     # planning: one batched scoring pass -> per-query probability rows
@@ -201,6 +259,8 @@ class QueryBatch:
         queries: Sequence[BatchQuery],
         rate: float,
         rng: Optional[np.random.Generator] = None,
+        *,
+        pressure: float = 0.0,
     ) -> List[Any]:
         """Run the batch; returns one result per query, in order:
         ``PhraseCountResult`` / ``RetrievalResult`` / ``RankedResult``
@@ -213,16 +273,30 @@ class QueryBatch:
         Sampling draws happen in query order from ``rng``, so a batch
         reproduces the exact sample sequence of a single-query loop
         over the same queries with the same generator.
+
+        With a planner, ``rate`` is the nominal rate and each query
+        samples at its own planned rate (its budget inverted through
+        the planner's error/latency models, degraded toward its floor
+        by ``pressure`` in [0, 1] — the controller's overload signal,
+        forwarded by ``BatchWindow``).  Queries at a planned rate
+        >= 1.0 take the precise path individually, so an unbudgeted
+        batch at nominal rate 1.0 stays bit-for-bit the precise
+        fast path.
         """
         rng = rng or np.random.default_rng(0)
         t0 = time.perf_counter()
         n_shards = self.corpus.n_shards
-        precise = rate >= 1.0
 
-        if precise:
-            all_ids = np.arange(n_shards, dtype=np.int64)
-            uniform = np.full(n_shards, 1.0 / n_shards, np.float64)
-            samples = [SampleResult(all_ids, uniform, 1.0)] * len(queries)
+        if self.planner is not None:
+            rates, audit = self.planner.plan_batch(queries, rate, pressure)
+        else:
+            rates, audit = [float(rate)] * len(queries), None
+
+        all_ids = np.arange(n_shards, dtype=np.int64)
+        uniform = np.full(n_shards, 1.0 / n_shards, np.float64)
+        census = SampleResult(all_ids, uniform, 1.0)
+        if all(r >= 1.0 for r in rates):
+            samples = [census] * len(queries)
             plan = [all_ids] * len(queries)
         else:
             rows = self._probability_rows(queries)
@@ -230,10 +304,13 @@ class QueryBatch:
             # Hansen-Hurwitz estimator needs it); retrieval unions docs
             # over the sample, so it draws distinct shards — same
             # samplers, in the same query order, as the single-query
-            # entry points (pinned by the parity tests)
-            samples = [pps_sample(row, rate, rng) if q.kind == "count"
-                       else pps_sample_distinct(row, rate, rng)
-                       for q, row in zip(queries, rows)]
+            # entry points (pinned by the parity tests).  Per-query
+            # precise rates draw nothing, exactly as the single-query
+            # precise path draws nothing.
+            samples = [census if r >= 1.0
+                       else (pps_sample(row, r, rng) if q.kind == "count"
+                             else pps_sample_distinct(row, r, rng))
+                       for q, row, r in zip(queries, rows, rates)]
             plan = [unique_shards(s) for s in samples]
 
         if self.index is not None:
@@ -255,11 +332,45 @@ class QueryBatch:
         else:
             per_query = self._inline_shared_scan(plan, fns)
             self.last_audit = None
+            job = None
 
         elapsed = time.perf_counter() - t0
-        return [self._reduce(q, samples[i], plan[i], per_query[i], elapsed,
-                             precise)
-                for i, q in enumerate(queries)]
+        results = [self._reduce(q, samples[i], plan[i], per_query[i],
+                                elapsed, rates[i] >= 1.0)
+                   for i, q in enumerate(queries)]
+        self._feedback(queries, rates, results, audit, job)
+        return results
+
+    def _feedback(self, queries: Sequence[BatchQuery],
+                  rates: Sequence[float], results: Sequence[Any],
+                  audit, job) -> None:
+        """Close the planning loop: fold every realized (sample size,
+        relative error) back into the planner's per-kind error curves,
+        complete the batch's ``BudgetAudit`` with realized errors, and
+        attach its record to ``last_budget`` and the executor's
+        ``last_job["budget"]`` (the budget analogue of the balance
+        audit)."""
+        if self.planner is None or audit is None:
+            self.last_budget = None
+            return
+        realized: List[Optional[float]] = []
+        for q, r, res in zip(queries, rates, results):
+            est = getattr(res, "estimate", None)
+            if est is None:
+                realized.append(None)
+                continue
+            # ranked stability is a score in [0, 1]; its error is the
+            # instability (1 - value), already relative
+            rel = (1.0 - est.value if q.kind == "ranked"
+                   else est.relative_error)
+            realized.append(rel)
+            conf = (q.budget.confidence if q.budget is not None
+                    else self.confidence)
+            self.planner.observe_result(q.kind, r, est.n, rel, conf)
+        audit.realized_rel_error = realized
+        self.last_budget = audit.record()
+        if isinstance(job, dict):
+            job["budget"] = self.last_budget
 
     def _inline_shared_scan(
         self,
@@ -279,22 +390,39 @@ class QueryBatch:
                 distinct: np.ndarray, by_shard: Dict[int, Any],
                 elapsed: float, precise: bool) -> Any:
         n_shards = self.corpus.n_shards
+        conf = (q.budget.confidence if q.budget is not None
+                else self.confidence)
         if q.kind == "count":
             if precise:
                 total = float(sum(by_shard.values()))
-                est = Estimate(total, 0.0, self.confidence, n_shards)
+                est = Estimate(total, 0.0, conf, n_shards)
             else:
                 local = np.asarray([by_shard[int(s)]
                                     for s in sample.shard_ids], np.float64)
-                est = ht_estimate(local, sample, self.confidence)
+                est = ht_estimate(local, sample, conf)
             return PhraseCountResult(est, sample, len(distinct), n_shards,
                                      elapsed)
         if q.kind == "bool":
             hits = [by_shard[int(s)] for s in distinct]
             doc_ids = (np.concatenate(hits) if hits
                        else np.zeros(0, np.int64))
+            est = None
+            if self.ci:
+                if precise:
+                    est = Estimate(float(len(np.unique(doc_ids))), 0.0,
+                                   conf, n_shards)
+                else:
+                    # result-size CI by resampling the per-shard hit
+                    # counts; a fresh deterministic generator so the
+                    # sampling rng stream stays parity-exact
+                    local = np.asarray([len(by_shard[int(s)])
+                                        for s in sample.shard_ids],
+                                       np.float64)
+                    est = bootstrap_estimate(
+                        local, sample, conf,
+                        rng=np.random.default_rng(len(distinct)))
             return RetrievalResult(np.unique(doc_ids), sample, len(distinct),
-                                   n_shards, elapsed)
+                                   n_shards, elapsed, est)
         parts = [by_shard[int(s)] for s in distinct]
         if parts:
             ids = np.concatenate([p[0] for p in parts])
@@ -302,5 +430,13 @@ class QueryBatch:
         else:
             ids, sc = np.zeros(0, np.int64), np.zeros(0, np.float64)
         order = np.argsort(-sc, kind="stable")[:q.k]
+        est = None
+        if self.ci:
+            if precise:
+                est = Estimate(1.0, 0.0, conf, n_shards)
+            else:
+                est = bootstrap_topk_stability(
+                    parts, q.k, conf,
+                    rng=np.random.default_rng(len(distinct)))
         return RankedResult(ids[order], sc[order], sample, len(distinct),
-                            n_shards, elapsed)
+                            n_shards, elapsed, est)

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core.index import ApproxIndex
 from repro.core.sampling import (
+    Estimate,
     SampleResult,
     pps_sample_distinct,
     similarity_probabilities,
@@ -145,10 +146,19 @@ class RetrievalResult(NamedTuple):
     shards_read: int
     n_shards: int
     elapsed_s: float
+    # result-size estimate with bootstrap CI (batch engine with CIs
+    # enabled; None from the single-query path / with CIs off)
+    estimate: Optional["Estimate"] = None
 
     @property
     def data_fraction(self) -> float:
         return self.shards_read / self.n_shards
+
+    @property
+    def achieved_rate(self) -> float:
+        """The rate actually served (after budget planning and any
+        degradation): the fraction of shards physically read."""
+        return self.data_fraction
 
 
 def boolean_query(
@@ -264,6 +274,20 @@ class RankedResult(NamedTuple):
     shards_read: int
     n_shards: int
     elapsed_s: float
+    # top-k stability score with bootstrap CI: 1.0 = every resample of
+    # the sampled shards reproduces this top-k (batch engine with CIs
+    # enabled; None from the single-query path / with CIs off)
+    estimate: Optional["Estimate"] = None
+
+    @property
+    def data_fraction(self) -> float:
+        return self.shards_read / self.n_shards
+
+    @property
+    def achieved_rate(self) -> float:
+        """The rate actually served (after budget planning and any
+        degradation): the fraction of shards physically read."""
+        return self.data_fraction
 
 
 def ranked_query(

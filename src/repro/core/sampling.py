@@ -12,7 +12,8 @@ framing.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import math
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -102,11 +103,37 @@ class Estimate(NamedTuple):
 
     @property
     def relative_error(self) -> float:
-        return self.error_bound / abs(self.value) if self.value else float("inf")
+        """``error_bound / |value|``, degenerate-safe.
+
+        Serving plans rates from realized relative errors, so the
+        degenerate corners an online planner actually hits must come
+        back as orderable floats, never raise or go NaN: a single
+        sampled shard carries an infinite bound (df=0 — no variance
+        estimate exists); a zero-valued estimate has no scale, so any
+        positive bound is unbounded error while a zero-width bound
+        around zero (an exact zero, e.g. a census that found nothing)
+        is exactly 0.0."""
+        if math.isnan(self.error_bound) or math.isinf(self.error_bound):
+            return float("inf")
+        if self.value == 0.0 or not math.isfinite(self.value):
+            return 0.0 if self.error_bound == 0.0 else float("inf")
+        return abs(self.error_bound) / abs(self.value)
 
     @property
-    def interval(self):
+    def interval(self) -> Tuple[float, float]:
+        """``(value - eps, value + eps)``, always well-ordered: an
+        infinite bound yields ``(-inf, inf)`` (covers everything)
+        instead of the NaN endpoints naive arithmetic produces when
+        the value itself is non-finite."""
+        if not math.isfinite(self.error_bound):
+            return (float("-inf"), float("inf"))
         return (self.value - self.error_bound, self.value + self.error_bound)
+
+    def covers(self, truth: float) -> bool:
+        """Does the interval contain ``truth``?  (The smoke gate's
+        ground-truth coverage check for count queries.)"""
+        lo, hi = self.interval
+        return lo <= truth <= hi
 
 
 def ht_estimate(
@@ -124,10 +151,20 @@ def ht_estimate(
     n = tau.shape[0]
     scaled = tau / phi                      # tau_s / phi_s
     tau_hat = scaled.mean() / 1.0
-    # Eq 1 has (1/n) sum, i.e. the mean of scaled values
-    if n > 1:
+    # Eq 1 has (1/n) sum, i.e. the mean of scaled values.  The interval
+    # is degenerate-safe for the tiny samples degraded serving actually
+    # draws: with-replacement draws that all land on ONE shard carry no
+    # variance information (the naive formula returns a zero-width CI
+    # around that shard's scaled value — confidently wrong), so the
+    # bound goes infinite; and the t quantile uses the *distinct* draw
+    # count as its effective replication — duplicate draws of a hot
+    # shard are not independent evidence, and the naive n-1 df lets a
+    # near-collapsed sample report a far tighter interval than its
+    # information content supports.
+    n_distinct = len(np.unique(sample.shard_ids)) if n else 0
+    if n > 1 and n_distinct > 1:
         var_hat = np.sum((scaled - tau_hat) ** 2) / (n * (n - 1))
-        eps = t_critical_value(n - 1, confidence) * np.sqrt(var_hat)
+        eps = t_critical_value(n_distinct - 1, confidence) * np.sqrt(var_hat)
     else:
         eps = float("inf")
     return Estimate(float(tau_hat), float(eps), confidence, n)
@@ -151,10 +188,14 @@ def mean_estimate(
     if c_hat == 0:
         return Estimate(0.0, float("inf"), confidence, n)
     r = s_hat / c_hat
-    if n > 1:
+    # same degenerate-sample guard as ht_estimate: one distinct shard
+    # carries no variance information, and duplicate draws are not
+    # independent evidence for the t quantile
+    n_distinct = len(np.unique(sample.shard_ids)) if n else 0
+    if n > 1 and n_distinct > 1:
         resid = (sums - r * counts) / phi
         var = np.sum((resid - resid.mean()) ** 2) / (n * (n - 1)) / (c_hat ** 2)
-        eps = t_critical_value(n - 1, confidence) * np.sqrt(max(var, 0.0))
+        eps = t_critical_value(n_distinct - 1, confidence) * np.sqrt(max(var, 0.0))
     else:
         eps = float("inf")
     return Estimate(float(r), float(eps), confidence, n)
@@ -164,3 +205,84 @@ def unique_shards(sample: SampleResult) -> np.ndarray:
     """Distinct shards to physically read (I/O dedup; estimator still
     uses the with-replacement multiset)."""
     return np.unique(sample.shard_ids)
+
+
+def bootstrap_estimate(
+    local_values: np.ndarray,
+    sample: SampleResult,
+    confidence: float = 0.95,
+    n_boot: int = 64,
+    rng: Optional[np.random.Generator] = None,
+) -> Estimate:
+    """Percentile-bootstrap CI over *sampled shard partials*.
+
+    Where no closed-form variance exists (Boolean result sizes, union
+    cardinalities) we resample the per-shard scaled partials
+    ``tau_s/phi_s`` with replacement — never the documents, so the cost
+    is O(n_boot * n_sampled_shards), trivial next to the scan itself.
+    The point estimate is the same Hansen-Hurwitz mean as
+    ``ht_estimate``; only the interval differs."""
+    tau = np.asarray(local_values, np.float64)
+    phi = sample.probabilities[sample.shard_ids]
+    n = tau.shape[0]
+    scaled = tau / np.maximum(phi, 1e-300)
+    point = float(scaled.mean()) if n else 0.0
+    if n < 2:
+        return Estimate(point, float("inf"), confidence, n)
+    if rng is None:
+        rng = np.random.default_rng(0)
+    idx = rng.integers(0, n, size=(n_boot, n))
+    reps = scaled[idx].mean(axis=1)
+    alpha = (1.0 - confidence) / 2.0
+    lo, hi = np.quantile(reps, [alpha, 1.0 - alpha])
+    eps = max(point - float(lo), float(hi) - point, 0.0)
+    return Estimate(point, float(eps), confidence, n)
+
+
+def bootstrap_topk_stability(
+    parts: Sequence[Tuple[np.ndarray, np.ndarray]],
+    k: int,
+    confidence: float = 0.95,
+    n_boot: int = 48,
+    rng: Optional[np.random.Generator] = None,
+) -> Estimate:
+    """Stability score for a sampled top-k: mean overlap fraction between
+    the full-sample top-k and top-k lists recomputed on bootstrap
+    resamples of the sampled shards.
+
+    ``parts`` holds one ``(doc_ids, scores)`` pair per sampled shard.
+    A value of 1.0 means the ranking is insensitive to which of the
+    sampled shards contributed (every resample reproduces the same
+    top-k); low values flag rankings that a slightly different sample
+    would have changed.  Reported as an ``Estimate`` so ranked results
+    carry the same ``(value, ci)`` shape as counts."""
+    n = len(parts)
+    if n == 0 or k <= 0:
+        return Estimate(0.0, float("inf"), confidence, n)
+
+    def _topk(pairs) -> np.ndarray:
+        ids = np.concatenate([p[0] for p in pairs])
+        sc = np.concatenate([p[1] for p in pairs])
+        order = np.argsort(-sc, kind="stable")
+        uniq, first = np.unique(ids[order], return_index=True)
+        return uniq[np.argsort(first, kind="stable")[:k]]
+
+    ref = _topk(parts)
+    if ref.size == 0:
+        return Estimate(0.0, float("inf"), confidence, n)
+    if n < 2:
+        return Estimate(1.0, float("inf"), confidence, n)
+    if rng is None:
+        rng = np.random.default_rng(0)
+    ref_set = set(ref.tolist())
+    overlaps = np.empty(n_boot, np.float64)
+    for b in range(n_boot):
+        pick = rng.integers(0, n, size=n)
+        top = _topk([parts[i] for i in pick])
+        hit = sum(1 for d in top.tolist() if d in ref_set)
+        overlaps[b] = hit / float(ref.size)
+    value = float(overlaps.mean())
+    alpha = (1.0 - confidence) / 2.0
+    lo, hi = np.quantile(overlaps, [alpha, 1.0 - alpha])
+    eps = max(value - float(lo), float(hi) - value, 0.0)
+    return Estimate(value, float(eps), confidence, n)

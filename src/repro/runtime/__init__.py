@@ -15,6 +15,12 @@
                    queries in, deadline/size-closed batches out
   ``controller`` — queueing-theory window autotuner
                    (``WindowController``) + ``Backpressure`` shedding
+                   + the degradation-pressure state machine
+  ``budget``     — error/latency budgets (``QueryBudget``) and the
+                   SLO-driven rate planner (``RatePlanner``): inverts
+                   the paper's variance model / fitted error curves to
+                   pick the smallest per-query sampling rate meeting
+                   each budget
 
 The multi-host dataflow is placement -> balance -> executor: the
 ``PlacementMap`` bounds where a shard *may* run (primary + live ring
@@ -28,11 +34,39 @@ the single-executor results.
 ``BatchWindow`` takes either executor flavor behind its engine — a
 single-host pool and a placement-split host group expose the same
 ``map_shard_batch`` surface.
+
+Under overload the controller drives *two actuators*, in order:
+
+  1. **degrade** (accuracy): utilization past the saturation band — or
+     the pending queue hitting its bound — ratchets the controller's
+     ``pressure`` toward 1.0; the window forwards it to an
+     accuracy-elastic engine (``QueryBatch`` + ``RatePlanner``), which
+     slides every query's sampling rate from its budget-planned value
+     toward its budget floor.  Capacity rises because batch service is
+     ~linear in shards scanned; answers stay correct because every
+     result carries its error bound at whatever rate was served.
+  2. **shed** (availability): only once pressure sits at 1.0 — every
+     pending query already at its floor — and the queue still
+     stretches past twice its bound does ``submit`` raise
+     ``Backpressure`` (now with a ``retry_after_s`` hint from the
+     controller's plan).
+
+Both directions are hysteretic (asymmetric enter/exit utilization
+thresholds, mirroring ``balance``'s asymmetric band), and every
+degradation decision lands in a ``BudgetAudit`` on
+``last_job["budget"]`` the way balance decisions land on
+``last_job["balance"]``.
 """
 from repro.runtime.balance import (  # noqa: F401
     BalanceConfig,
     HostLoadModel,
     plan_split,
+)
+from repro.runtime.budget import (  # noqa: F401
+    BudgetAudit,
+    PlannerConfig,
+    QueryBudget,
+    RatePlanner,
 )
 from repro.runtime.controller import (  # noqa: F401
     Backpressure,

@@ -103,15 +103,24 @@ class Backpressure(RuntimeError):
     shed, not enqueued.  Retry with jitter or divert to another replica.
     ``depth`` is the queue depth at rejection; ``utilization`` the
     controller's dispatcher-utilization estimate (>= 1.0 ~ saturated),
-    or None when the window runs without a controller."""
+    or None when the window runs without a controller.
+    ``retry_after_s`` is the controller's estimate of when capacity
+    frees up — the current window deadline plus one full-batch service
+    time — so a shed caller can back off for one serving cycle instead
+    of hot-retrying into the same full queue (None without a
+    controller)."""
 
-    def __init__(self, depth: int, utilization: Optional[float] = None):
+    def __init__(self, depth: int, utilization: Optional[float] = None,
+                 retry_after_s: Optional[float] = None):
         self.depth = depth
         self.utilization = utilization
+        self.retry_after_s = retry_after_s
         util = (f", utilization ~{utilization:.2f}"
                 if utilization is not None else "")
+        retry = (f", retry after ~{retry_after_s * 1e3:.1f} ms"
+                 if retry_after_s is not None else "")
         super().__init__(
-            f"batch window pending queue full ({depth} queued{util})")
+            f"batch window pending queue full ({depth} queued{util}{retry})")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +136,15 @@ class ControllerConfig:
     n_delay_candidates: int = 8     # geometric grid resolution
     pivot_batch: int = 8            # small-n / large-n regime boundary
     #                                 (1 collapses to one pooled fit)
+    # degradation ladder (the second actuator): utilization above
+    # ``degrade_enter_util`` ratchets pressure up by ``degrade_step``
+    # per replan, utilization below ``degrade_exit_util`` ratchets it
+    # down — the gap between the two thresholds is the hysteresis dead
+    # band (mirroring balance.py's asymmetric band) so pressure does
+    # not flap when load hovers at the threshold
+    degrade_enter_util: float = 0.85
+    degrade_exit_util: float = 0.6
+    degrade_step: float = 0.25
 
     def __post_init__(self):
         if not (0 < self.min_delay_s <= self.max_delay_s):
@@ -144,6 +162,13 @@ class ControllerConfig:
         if self.pivot_batch < 1:
             raise ValueError(
                 f"pivot_batch must be >= 1, got {self.pivot_batch}")
+        if not (0.0 <= self.degrade_exit_util < self.degrade_enter_util):
+            raise ValueError(
+                f"need 0 <= degrade_exit_util < degrade_enter_util, got "
+                f"{self.degrade_exit_util} / {self.degrade_enter_util}")
+        if not (0.0 < self.degrade_step <= 1.0):
+            raise ValueError(
+                f"degrade_step must be in (0, 1], got {self.degrade_step}")
 
 
 class _CostFit:
@@ -236,6 +261,12 @@ class WindowController:
         self._scan_s: Optional[float] = None     # executor telemetry EWMA
         self._plan: Optional[WindowPlan] = None
         self._plan_at: float = -math.inf
+        # degradation pressure in [0, 1]: the accuracy actuator's
+        # position (0 = every query at its planned rate, 1 = every
+        # query at its budget floor); ratcheted by plan() under the
+        # asymmetric utilization band, escalated to 1.0 by the window
+        # when the pending queue hits its bound
+        self._pressure: float = 0.0
 
     # ------------------------------------------------------------------
     # observations
@@ -385,6 +416,16 @@ class WindowController:
             _, rho = self._estimate_p99(lam, d, b)
         self._plan = WindowPlan(d, b, p99, rho, lam, saturated)
         self._plan_at = now
+        # degradation ladder: ratchet pressure inside the asymmetric
+        # utilization band (enter high, exit low — the dead band
+        # between them is hysteresis against flapping, as in
+        # balance.py).  Saturation counts as over-threshold even when
+        # rho at the pinned fallback plan reads < 1.
+        cfg = self.config
+        if saturated or rho >= cfg.degrade_enter_util:
+            self._pressure = min(1.0, self._pressure + cfg.degrade_step)
+        elif rho <= cfg.degrade_exit_util:
+            self._pressure = max(0.0, self._pressure - cfg.degrade_step)
         return self._plan
 
     def window_params(self, now: Optional[float] = None
@@ -404,3 +445,33 @@ class WindowController:
     @property
     def utilization(self) -> Optional[float]:
         return self._plan.utilization if self._plan is not None else None
+
+    # ------------------------------------------------------------------
+    # degradation (the accuracy actuator)
+    # ------------------------------------------------------------------
+    @property
+    def pressure(self) -> float:
+        """Current degradation pressure in [0, 1]; the batch engine's
+        planner maps it linearly onto each query's rate-vs-floor span
+        (``runtime.budget.RatePlanner.plan_batch``)."""
+        return self._pressure
+
+    def escalate_pressure(self) -> float:
+        """Jump pressure to 1.0 (every query straight to its budget
+        floor).  Called by ``BatchWindow`` the moment the pending
+        queue hits its bound: the queue filling up is a harder signal
+        than any utilization estimate, and the ladder must exhaust the
+        accuracy actuator *before* the availability one (shedding)."""
+        self._pressure = 1.0
+        return self._pressure
+
+    def retry_after_s(self) -> Optional[float]:
+        """Estimated time until the dispatcher can absorb new work: the
+        current window deadline plus one full-batch service time (one
+        serving cycle).  Attached to ``Backpressure`` so shed callers
+        back off for a cycle instead of hot-retrying; None before the
+        first plan exists."""
+        if self._plan is None:
+            return None
+        return self._plan.delay_s + self.service_cost(
+            float(self._plan.max_batch))

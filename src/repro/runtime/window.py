@@ -39,6 +39,20 @@ Two optional control loops close the remaining gaps:
     unserved, ``submit`` sheds with the typed ``Backpressure`` signal
     instead of letting sojourn grow without bound behind a saturated
     dispatcher.
+
+When the engine can trade accuracy for capacity (it advertises
+``accepts_pressure``, i.e. a ``QueryBatch`` with a
+``runtime.budget.RatePlanner``), the queue bound becomes a *two-stage*
+ladder instead of a cliff: the first bound-hit escalates the
+controller's degradation pressure to 1.0 (every pending query drops to
+its budget floor rate — see ``runtime/budget.py``) and the query is
+*accepted*; only once the queue stretches to twice the bound with the
+engine already fully degraded does ``submit`` shed.  Overload degrades
+accuracy before availability, and every shed carries the controller's
+``retry_after_s`` hint so callers back off one serving cycle.  The
+dispatcher forwards the controller's current pressure to each
+``engine.execute`` call, and the engine's per-batch budget audit
+(planned vs realized rates and errors) lands on ``last_budget``.
 """
 from __future__ import annotations
 
@@ -88,9 +102,14 @@ class BatchWindow:
         self._closed = False
         self.stats: Dict[str, int] = {
             "batches": 0, "served": 0, "cancelled": 0, "shed": 0,
+            "escalated": 0, "degraded": 0,
             "closed_by_size": 0, "closed_by_deadline": 0,
             "closed_by_flush": 0,
         }
+        # the engine's budget audit for the most recent batch (planned
+        # vs realized per-query rates/errors), when the engine keeps
+        # one (QueryBatch with a RatePlanner) — None otherwise
+        self.last_budget: Optional[Dict[str, Any]] = None
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="batch-window")
         self._thread.start()
@@ -116,10 +135,26 @@ class BatchWindow:
                 raise RuntimeError("BatchWindow is closed")
             if (self.max_pending is not None
                     and len(self._pending) >= self.max_pending):
-                self.stats["shed"] += 1
-                util = (self.controller.utilization
-                        if self.controller is not None else None)
-                raise Backpressure(len(self._pending), util)
+                # degrade before shedding: an accuracy-elastic engine
+                # absorbs the overload by dropping every pending query
+                # to its budget floor (pressure -> 1.0), and the queue
+                # may stretch to twice the bound while the degraded
+                # capacity catches up.  Shed only beyond that hard cap
+                # — by then every query is already at its floor and
+                # accuracy has nothing left to give.
+                can_degrade = (
+                    self.controller is not None
+                    and getattr(self.engine, "accepts_pressure", False))
+                if can_degrade and len(self._pending) < 2 * self.max_pending:
+                    self.controller.escalate_pressure()
+                    self.stats["escalated"] += 1
+                else:
+                    self.stats["shed"] += 1
+                    util = retry = None
+                    if self.controller is not None:
+                        util = self.controller.utilization
+                        retry = self.controller.retry_after_s()
+                    raise Backpressure(len(self._pending), util, retry)
             if self.controller is not None:
                 self.controller.observe_arrival(now)
             self._pending.append((query, fut))
@@ -202,12 +237,21 @@ class BatchWindow:
                    if f.set_running_or_notify_cancel()]
         dropped = len(batch) - len(claimed)
         service_s = None
+        pressure = 0.0
         if claimed:
             queries = [q for q, _ in claimed]
+            # an accuracy-elastic engine takes the controller's current
+            # degradation pressure with the batch; plain engines keep
+            # the legacy signature (the kwarg would be a TypeError)
+            kwargs = {}
+            if getattr(self.engine, "accepts_pressure", False):
+                pressure = (self.controller.pressure
+                            if self.controller is not None else 0.0)
+                kwargs["pressure"] = pressure
             t0 = time.perf_counter()
             try:
                 results = self.engine.execute(queries, self.rate,
-                                              rng=self._rng)
+                                              rng=self._rng, **kwargs)
             except BaseException as exc:  # deliver failures to every waiter
                 for _, fut in claimed:
                     fut.set_exception(exc)
@@ -221,6 +265,9 @@ class BatchWindow:
                 return
             self.stats["batches"] += 1
             self.stats["served"] += len(claimed)
+            if pressure > 0.0:
+                self.stats["degraded"] += len(claimed)
+            self.last_budget = getattr(self.engine, "last_budget", None)
             self.stats[f"closed_by_{reason}"] += 1
             if self.controller is not None and service_s is not None:
                 # the executor's per-job telemetry attributes the batch

@@ -268,3 +268,115 @@ def test_save_load_preserves_execution_config(tmp_path, small_corpus,
     # a persisted doc-granular index must score doc-granular after load
     np.testing.assert_allclose(loaded.shard_similarities([3, 5]),
                                idx.shard_similarities([3, 5]), rtol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# error-budgeted execution (runtime.budget.RatePlanner integration)
+# ----------------------------------------------------------------------
+def test_planner_engine_parity_for_unbudgeted_queries(small_corpus,
+                                                      built_index):
+    """A planner on the engine must be bit-for-bit invisible to queries
+    that carry no budget — including the precise rate-1.0 fast path and
+    with CI construction on (the bootstrap never touches the sampling
+    rng)."""
+    from repro.runtime import RatePlanner
+    queries = _mixed_queries()
+    for rate in (0.3, 1.0):
+        plain = QueryBatch(small_corpus, built_index).execute(
+            queries, rate, rng=np.random.default_rng(21))
+        planned = QueryBatch(
+            small_corpus, built_index,
+            planner=RatePlanner(small_corpus.n_shards),
+            ci=True).execute(queries, rate, rng=np.random.default_rng(21))
+        for q, a, b in zip(queries, plain, planned):
+            if q.kind == "count":
+                assert b.estimate.value == a.estimate.value
+                assert b.estimate.error_bound == a.estimate.error_bound
+            else:
+                np.testing.assert_array_equal(b.doc_ids, a.doc_ids)
+                if hasattr(a, "scores"):
+                    np.testing.assert_array_equal(b.scores, a.scores)
+            assert b.shards_read == a.shards_read
+
+
+def test_budgeted_queries_plan_their_own_rates(small_corpus, built_index):
+    from repro.runtime import QueryBudget, RatePlanner
+    planner = RatePlanner(small_corpus.n_shards)
+    engine = QueryBatch(small_corpus, built_index, planner=planner,
+                        ci=True)
+    assert engine.accepts_pressure
+    budget = QueryBudget(max_rel_error=0.6, floor_rate=0.25)
+    queries = [dataclasses.replace(q, budget=budget)
+               for q in _mixed_queries()]
+    res = engine.execute(queries, 0.3, rng=np.random.default_rng(5))
+    audit = engine.last_budget
+    assert audit is not None
+    assert audit["budgeted"] == len(queries)
+    assert audit["pressure"] == 0.0 and audit["degraded"] == 0
+    n = small_corpus.n_shards
+    for q, r, planned in zip(queries, res, audit["planned_rates"]):
+        assert 0.25 <= planned <= 1.0
+        n_req = int(np.ceil(planned * n))
+        if q.kind == "count":
+            # with-replacement draws match the plan; *distinct* shards
+            # physically read may be fewer (duplicates dedup in I/O)
+            assert r.estimate.n == n_req
+            assert r.shards_read <= n_req
+        else:
+            # retrieval samples distinct shards: achieved rate is the
+            # ceil-quantized planned rate exactly
+            assert r.shards_read == min(n, n_req)
+        assert r.estimate is not None          # every kind carries a CI
+    assert len(audit["realized_rel_error"]) == len(queries)
+    # the loop closed: realized errors fed the per-kind curves
+    assert planner.curve("count").count >= 1
+
+
+def test_budget_pressure_degrades_to_floor(small_corpus, built_index):
+    """pressure=1.0 squeezes every budgeted query to its floor and the
+    audit lands on the executor's last_job (the balance-audit
+    pattern)."""
+    from repro.runtime import QueryBudget, RatePlanner
+    budget = QueryBudget(max_rel_error=0.5, floor_rate=0.25)
+    queries = [dataclasses.replace(q, budget=budget)
+               for q in _mixed_queries()]
+    ex = ShardTaskExecutor(workers=2)
+    engine = QueryBatch(small_corpus, built_index, executor=ex,
+                        planner=RatePlanner(small_corpus.n_shards),
+                        ci=True)
+    res = engine.execute(queries, 0.3, rng=np.random.default_rng(6),
+                         pressure=1.0)
+    audit = engine.last_budget
+    assert audit["pressure"] == 1.0
+    assert audit["at_floor"] == len(queries)
+    assert all(r == pytest.approx(0.25) for r in audit["planned_rates"])
+    n = small_corpus.n_shards
+    for r in res:
+        assert r.shards_read <= int(np.ceil(0.25 * n))
+    assert ex.last_job["budget"] == audit
+    # a degraded count still reports an honest interval: possibly
+    # infinite (collapsed sample), never NaN
+    for q, r in zip(queries, res):
+        if q.kind == "count":
+            assert not np.isnan(r.estimate.error_bound)
+    ex.close()
+
+
+def test_ci_flag_adds_intervals_to_retrieval(small_corpus, built_index):
+    """ci=True: boolean results carry a bootstrap count estimate,
+    ranked results a top-k stability score in [0, 1]; ci=False leaves
+    the estimate slot empty (legacy shape)."""
+    queries = _mixed_queries()
+    on = QueryBatch(small_corpus, built_index, ci=True).execute(
+        queries, 0.4, rng=np.random.default_rng(9))
+    off = QueryBatch(small_corpus, built_index).execute(
+        queries, 0.4, rng=np.random.default_rng(9))
+    for q, r_on, r_off in zip(queries, on, off):
+        if q.kind == "bool":
+            assert r_on.estimate is not None
+            assert r_on.estimate.value >= 0.0
+            assert r_off.estimate is None
+        elif q.kind == "ranked":
+            assert r_on.estimate is not None
+            assert 0.0 <= r_on.estimate.value <= 1.0
+            assert r_off.estimate is None

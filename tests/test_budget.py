@@ -1,0 +1,214 @@
+"""Budget/planner unit behavior: validation, the invertible error
+curve, budget inversion, the latency cap, and the degradation ladder.
+Integration with the batch engine lives in test_batch_engine.py; the
+window's degrade-before-shed path in test_controller.py."""
+import math
+
+import pytest
+
+from repro.runtime.budget import (
+    BudgetAudit,
+    PlannerConfig,
+    QueryBudget,
+    RatePlanner,
+)
+from repro.utils.stats import t_critical_value
+
+
+class _Q:
+    """Duck-typed query: the planner only reads .kind and .budget."""
+
+    def __init__(self, kind="count", budget=None):
+        self.kind = kind
+        self.budget = budget
+
+
+# ----------------------------------------------------------------------
+# validation
+# ----------------------------------------------------------------------
+
+def test_budget_requires_some_budget():
+    with pytest.raises(ValueError):
+        QueryBudget()
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(max_rel_error=0.0),
+    dict(max_rel_error=-0.1),
+    dict(max_latency_s=0.0),
+    dict(max_rel_error=0.1, confidence=0.0),
+    dict(max_rel_error=0.1, confidence=1.0),
+    dict(max_rel_error=0.1, floor_rate=0.0),
+    dict(max_rel_error=0.1, floor_rate=1.5),
+])
+def test_budget_rejects_bad_fields(kwargs):
+    with pytest.raises(ValueError):
+        QueryBudget(**kwargs)
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(default_floor_rate=0.0),
+    dict(default_floor_rate=1.5),
+    dict(curve_alpha=0.0),
+    dict(seed_rel_scale=0.0),
+])
+def test_planner_config_rejects_bad_fields(kwargs):
+    with pytest.raises(ValueError):
+        PlannerConfig(**kwargs)
+
+
+def test_planner_rejects_bad_shard_count():
+    with pytest.raises(ValueError):
+        RatePlanner(0)
+
+
+# ----------------------------------------------------------------------
+# the error curve e(n) = t_{n-1} * s_rel / sqrt(n)
+# ----------------------------------------------------------------------
+
+def test_curve_seed_then_learn():
+    planner = RatePlanner(16)
+    curve = planner.curve("count")
+    assert curve.scale() == planner.config.seed_rel_scale
+    # a realized (n, e) pair teaches the exact scale that reproduces it
+    n, e = 8, 0.3
+    curve.observe(n, e)
+    s_obs = e * math.sqrt(n) / t_critical_value(n - 1, 0.95)
+    assert curve.scale() == pytest.approx(s_obs)
+    assert curve.predict(n) == pytest.approx(e)
+
+
+def test_curve_skips_degenerate_observations():
+    curve = RatePlanner(16).curve("count")
+    curve.observe(1, 0.5)            # n < 2: no variance estimate
+    curve.observe(8, float("inf"))   # infinite error: no scale info
+    curve.observe(8, 0.0)            # exact answer: no scale info
+    assert curve.s_rel is None and curve.count == 0
+
+
+def test_curve_predict_is_monotone_decreasing():
+    curve = RatePlanner(64).curve("count")
+    errs = [curve.predict(n) for n in range(2, 65)]
+    assert all(a >= b for a, b in zip(errs, errs[1:]))
+    assert curve.predict(1) == float("inf")
+
+
+def test_required_n_inverts_predict():
+    curve = RatePlanner(64).curve("count")
+    for target in (0.3, 0.5, 0.9):
+        n = curve.required_n(target, 0.95, 64)
+        assert curve.predict(n) <= target
+        if n > 2:
+            assert curve.predict(n - 1) > target
+    # a target below predict(n_max) is unmeetable: census fallback
+    assert curve.required_n(1e-9, 0.95, 64) == 64
+
+
+# ----------------------------------------------------------------------
+# plan_rate: budget inversion + latency cap
+# ----------------------------------------------------------------------
+
+def test_plan_rate_without_budget_is_identity():
+    planner = RatePlanner(16)
+    for base in (0.05, 0.3, 1.0, 2.0):
+        assert planner.plan_rate("count", None, base) == base
+
+
+def test_plan_rate_error_budget_plans_smallest_sufficient():
+    planner = RatePlanner(20)
+    # teach the curve a known scale so required_n is deterministic
+    planner.curve("count").observe(10, 0.2)
+    budget = QueryBudget(max_rel_error=0.25, floor_rate=0.05)
+    rate = planner.plan_rate("count", budget, 0.5)
+    n_req = planner.curve("count").required_n(0.25, 0.95, 20)
+    assert rate == pytest.approx(n_req / 20)
+    # a tighter budget can only raise the planned rate
+    tighter = planner.plan_rate(
+        "count", QueryBudget(max_rel_error=0.1, floor_rate=0.05), 0.5)
+    assert tighter >= rate
+    # floor and ceiling clamp
+    assert planner.plan_rate(
+        "count", QueryBudget(max_rel_error=5.0, floor_rate=0.3), 0.5) >= 0.3
+    assert planner.plan_rate(
+        "count", QueryBudget(max_rel_error=1e-9), 0.5) <= 1.0
+
+
+def test_plan_rate_latency_budget_without_controller_keeps_base():
+    """No controller -> no cost model -> never degrade on a guess."""
+    planner = RatePlanner(16)
+    budget = QueryBudget(max_latency_s=0.01, floor_rate=0.05)
+    assert planner.plan_rate("count", budget, 0.4) == 0.4
+
+
+def test_plan_rate_latency_cap_scales_controller_p99():
+    class _Plan:
+        est_p99_s = 0.1
+
+    class _Ctl:
+        current_plan = _Plan()
+
+    planner = RatePlanner(16, controller=_Ctl())
+    planner._ref_rate = 0.4    # served rate that produced that p99
+    # half the p99 affordable -> half the reference rate
+    budget = QueryBudget(max_latency_s=0.05, floor_rate=0.01)
+    assert planner.plan_rate("count", budget, 0.4) == pytest.approx(0.2)
+    # combined budgets: the error plan is *capped* by the latency cap
+    planner.curve("count").observe(16, 0.5)   # want many shards
+    both = QueryBudget(max_rel_error=0.05, max_latency_s=0.05,
+                       floor_rate=0.01)
+    assert planner.plan_rate("count", both, 0.4) == pytest.approx(0.2)
+
+
+# ----------------------------------------------------------------------
+# plan_batch: the degradation ladder + audit
+# ----------------------------------------------------------------------
+
+def test_plan_batch_ladder_slides_toward_floor():
+    planner = RatePlanner(16)
+    budget = QueryBudget(max_rel_error=0.5, floor_rate=0.1)
+    qs = [_Q("count", budget), _Q("bool")]
+    r0, audit0 = planner.plan_batch(qs, 0.4, pressure=0.0)
+    r_half, _ = planner.plan_batch(qs, 0.4, pressure=0.5)
+    r_full, audit1 = planner.plan_batch(qs, 0.4, pressure=1.0)
+    for i, floor in enumerate([0.1, planner.config.default_floor_rate]):
+        assert r_half[i] == pytest.approx((r0[i] + floor) / 2)
+        assert r_full[i] == pytest.approx(floor)
+    assert audit0.pressure == 0.0 and audit0.degraded == 0
+    assert audit0.budgeted == 1
+    assert audit1.degraded == 2 and audit1.at_floor == 2
+
+
+def test_plan_batch_pressure_is_clamped():
+    planner = RatePlanner(16)
+    qs = [_Q("count", QueryBudget(max_rel_error=0.5, floor_rate=0.1))]
+    over, _ = planner.plan_batch(qs, 0.4, pressure=7.0)
+    full, _ = planner.plan_batch(qs, 0.4, pressure=1.0)
+    assert over == full
+    under, _ = planner.plan_batch(qs, 0.4, pressure=-3.0)
+    plain, _ = planner.plan_batch(qs, 0.4, pressure=0.0)
+    assert under == plain
+
+
+def test_audit_record_is_json_clean():
+    planner = RatePlanner(4)   # tiny corpus: some est errors are inf
+    qs = [_Q("count", QueryBudget(max_rel_error=0.5, floor_rate=0.3)),
+          _Q("ranked")]
+    _, audit = planner.plan_batch(qs, 0.25, pressure=0.25)
+    assert isinstance(audit, BudgetAudit)
+    rec = audit.record()
+    assert rec["budgeted"] == 1 and rec["pressure"] == 0.25
+    for xs in (rec["planned_rates"], rec["undegraded_rates"],
+               rec["floors"], rec["est_rel_error"],
+               rec["realized_rel_error"]):
+        assert all(x is None or math.isfinite(x) for x in xs)
+
+
+def test_observe_result_feeds_curve_and_ref_rate():
+    planner = RatePlanner(16)
+    planner.observe_result("count", 0.5, 8, 0.3)
+    assert planner.curve("count").count == 1
+    assert planner._ref_rate == pytest.approx(0.5)
+    # degenerate feedback touches neither model
+    planner.observe_result("count", 0.0, 1, float("inf"))
+    assert planner.curve("count").count == 1
+    assert planner._ref_rate == pytest.approx(0.5)

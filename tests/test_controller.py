@@ -365,3 +365,162 @@ def test_adaptive_window_end_to_end_under_load():
     assert all(1 <= n <= 16 for n in eng.batches)
     assert ctrl.arrival_rate > 0.0
     assert ctrl.current_plan is not None
+
+
+# ----------------------------------------------------------------------
+# degradation pressure: the ladder's state machine + degrade-before-shed
+# ----------------------------------------------------------------------
+def test_config_validation_degrade_knobs():
+    for kw in (dict(degrade_exit_util=0.9),          # exit >= enter
+               dict(degrade_enter_util=0.5, degrade_exit_util=0.5),
+               dict(degrade_step=0.0),
+               dict(degrade_step=1.5)):
+        with pytest.raises(ValueError):
+            ControllerConfig(**kw)
+
+
+class _PinnedUtil(WindowController):
+    """White-box stub pinning the estimated (p99, utilization) of every
+    candidate so the ratchet sees an exact utilization."""
+
+    def __init__(self, rho):
+        super().__init__(CFG)
+        self.rho = rho
+
+    def _estimate_p99(self, lam, d, n):
+        return (1e-3, self.rho)
+
+
+def test_pressure_ratchets_up_with_hysteresis():
+    c = _PinnedUtil(rho=0.9)             # above degrade_enter_util
+    step = CFG.degrade_step
+    for i in range(1, 4):
+        c.plan(float(i))
+        assert c.pressure == pytest.approx(min(1.0, i * step))
+    for i in range(4, 8):                # saturates at 1.0
+        c.plan(float(i))
+    assert c.pressure == 1.0
+    # inside the dead band (exit < rho < enter) pressure holds — the
+    # hysteresis that keeps accuracy from flapping at the threshold
+    c.rho = 0.7
+    c.plan(10.0)
+    assert c.pressure == 1.0
+    # below the exit threshold it ratchets back down to zero
+    c.rho = 0.3
+    for i in range(4):
+        c.plan(11.0 + i)
+    assert c.pressure == 0.0
+    c.plan(20.0)                         # and clamps at zero
+    assert c.pressure == 0.0
+
+
+def test_saturation_counts_as_over_threshold():
+    """An unstable plan (infinite p99 at every candidate) must ratchet
+    pressure even though the pinned fallback's rho may read < 1."""
+    c = WindowController(CFG)
+    t = _steady(c, 1e-5, batches=[(1, 1e-2)] * 5)
+    plan = c.plan(t)
+    assert plan.saturated
+    assert c.pressure == pytest.approx(CFG.degrade_step)
+
+
+def test_escalate_pressure_jumps_to_full():
+    c = WindowController(CFG)
+    assert c.pressure == 0.0
+    assert c.escalate_pressure() == 1.0
+    assert c.pressure == 1.0
+
+
+def test_retry_after_hint():
+    c = WindowController(CFG)
+    assert c.retry_after_s() is None     # no plan yet
+    t = _steady(c, 1e-3, batches=[(4, 1e-3)] * 8)
+    plan = c.plan(t)
+    hint = c.retry_after_s()
+    assert hint == pytest.approx(
+        plan.delay_s + c.service_cost(float(plan.max_batch)))
+    assert hint > 0.0
+
+
+def test_backpressure_carries_retry_after():
+    ctrl = _FixedController(delay_s=10.0, max_batch=1)
+    _steady(ctrl, 1e-5, batches=[(1, 1e-2)] * 5)
+    ctrl.plan(10.0)
+    eng = _GatedEngine()
+    win = BatchWindow(eng, 1.0, max_batch=1, controller=ctrl,
+                      max_pending=1)
+    win.submit("busy")
+    assert eng.started.wait(timeout=10)
+    win.submit("queued")
+    with pytest.raises(Backpressure) as exc:
+        win.submit("shed")
+    assert exc.value.retry_after_s is not None
+    assert exc.value.retry_after_s == pytest.approx(ctrl.retry_after_s())
+    eng.release.set()
+    win.close()
+
+
+class _ElasticGatedEngine(_GatedEngine):
+    """Gated engine that advertises accuracy elasticity: the window may
+    escalate pressure instead of shedding, and each batch records the
+    pressure it was served at."""
+
+    accepts_pressure = True
+
+    def __init__(self):
+        super().__init__()
+        self.pressures = []
+
+    def execute(self, queries, rate, rng=None, pressure=0.0):
+        with self._lock:
+            self.pressures.append(pressure)
+        return super().execute(queries, rate, rng)
+
+
+def test_window_degrades_before_shedding():
+    """The ladder end to end: at the queue bound an accuracy-elastic
+    engine absorbs overload via pressure escalation (queue stretches to
+    2x the bound), and only past the hard cap does submit shed."""
+    ctrl = _FixedController(delay_s=10.0, max_batch=1)
+    eng = _ElasticGatedEngine()
+    win = BatchWindow(eng, 0.5, max_batch=1, controller=ctrl,
+                      max_pending=2)
+    futs = [win.submit("busy")]
+    assert eng.started.wait(timeout=10)      # dispatcher blocked in batch 1
+    futs += [win.submit(i) for i in range(2)]     # fills the bound
+    # bound hit, engine elastic -> escalate + enqueue, twice
+    futs += [win.submit("deg1"), win.submit("deg2")]
+    assert win.stats["escalated"] == 2
+    assert win.stats["shed"] == 0
+    assert ctrl.pressure == 1.0
+    # queue now at the 2x hard cap: accuracy has nothing left to give
+    with pytest.raises(Backpressure):
+        win.submit("shed")
+    assert win.stats["shed"] == 1
+    eng.release.set()
+    for f in futs:
+        assert f.result(timeout=10)[0] == "done"
+    win.close()
+    # batch 1 was claimed before the escalation; every later batch ran
+    # fully degraded and is counted in the degraded stat
+    assert eng.pressures[0] == 0.0
+    assert all(p == 1.0 for p in eng.pressures[1:])
+    assert win.stats["degraded"] == len(futs) - 1
+
+
+def test_window_without_elastic_engine_sheds_at_bound():
+    """A controller alone is not enough: engines that cannot take
+    pressure keep the legacy shed-at-bound contract."""
+    ctrl = _FixedController(delay_s=10.0, max_batch=1)
+    eng = _GatedEngine()
+    win = BatchWindow(eng, 1.0, max_batch=1, controller=ctrl,
+                      max_pending=1)
+    win.submit("busy")
+    assert eng.started.wait(timeout=10)
+    win.submit("queued")
+    with pytest.raises(Backpressure):
+        win.submit("shed")
+    assert win.stats["escalated"] == 0 and win.stats["shed"] == 1
+    assert ctrl.pressure == 0.0
+    eng.release.set()
+    win.close()

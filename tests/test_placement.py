@@ -202,14 +202,13 @@ def _mixed_queries():
 def _assert_results_identical(got, want):
     for g, w in zip(got, want):
         assert type(g) is type(w)
-        if hasattr(g, "estimate"):                  # PhraseCountResult
+        if hasattr(g, "doc_ids"):                   # retrieval / ranked
+            np.testing.assert_array_equal(g.doc_ids, w.doc_ids)
+            if hasattr(g, "scores"):                # RankedResult
+                np.testing.assert_array_equal(g.scores, w.scores)
+        else:                                       # PhraseCountResult
             assert g.estimate.value == w.estimate.value
             assert g.estimate.error_bound == w.estimate.error_bound
-        elif hasattr(g, "scores"):                  # RankedResult
-            np.testing.assert_array_equal(g.doc_ids, w.doc_ids)
-            np.testing.assert_array_equal(g.scores, w.scores)
-        else:                                       # RetrievalResult
-            np.testing.assert_array_equal(g.doc_ids, w.doc_ids)
         assert g.shards_read == w.shards_read
 
 

@@ -89,3 +89,124 @@ def test_similarity_probabilities_floor():
     p = similarity_probabilities(np.array([0.0, 0.0, 1.0]))
     assert (p > 0).all() and p.sum() == pytest.approx(1.0)
     assert p[2] > p[0]
+
+
+# ----------------------------------------------------------------------
+# degenerate hardening (error-budgeted serving relies on these corners:
+# degraded rates draw tiny with-replacement samples that can collapse
+# onto one hot shard, and the planner orders queries by relative error)
+# ----------------------------------------------------------------------
+
+def test_estimate_degenerate_relative_error_and_interval():
+    from repro.core.sampling import Estimate
+    inf = float("inf")
+    assert Estimate(10.0, inf, 0.95, 1).relative_error == inf
+    assert Estimate(10.0, float("nan"), 0.95, 2).relative_error == inf
+    assert Estimate(0.0, 3.0, 0.95, 2).relative_error == inf
+    assert Estimate(0.0, 0.0, 0.95, 2).relative_error == 0.0
+    assert Estimate(10.0, 2.0, 0.95, 4).relative_error == pytest.approx(0.2)
+    lo, hi = Estimate(5.0, inf, 0.95, 1).interval
+    assert (lo, hi) == (-inf, inf)
+    assert Estimate(5.0, inf, 0.95, 1).covers(1e300)
+    assert Estimate(5.0, 1.0, 0.95, 4).covers(5.5)
+    assert not Estimate(5.0, 1.0, 0.95, 4).covers(6.5)
+
+
+def test_ht_estimate_single_distinct_shard_has_infinite_bound():
+    """All draws landing on one shard carries zero variance *information*
+    — the naive formula's zero-width CI around that shard's scaled value
+    would be confidently wrong, so the bound must go infinite (the value
+    itself stays the HH mean)."""
+    from repro.core.sampling import SampleResult
+    phi = np.array([0.9, 0.05, 0.05])
+    s = SampleResult(np.array([0, 0, 0, 0]), phi, 0.5)
+    est = ht_estimate(np.array([7.0, 7.0, 7.0, 7.0]), s)
+    assert est.value == pytest.approx(7.0 / 0.9)
+    assert est.error_bound == float("inf")
+    m = mean_estimate(np.array([7.0] * 4), np.array([2.0] * 4), s)
+    assert m.error_bound == float("inf")
+
+
+def test_ht_estimate_df_uses_distinct_draws():
+    """Duplicate with-replacement draws are not independent evidence:
+    the t quantile's df comes from the distinct-shard count, so a
+    near-collapsed sample reports a *wider* interval than the naive
+    n-1 df would."""
+    from repro.core.sampling import SampleResult
+    from repro.utils.stats import t_critical_value
+    phi = np.full(8, 1.0 / 8)
+    ids = np.array([0, 0, 0, 0, 0, 1])          # 6 draws, 2 distinct
+    tau = np.array([10.0, 10.0, 10.0, 10.0, 10.0, 30.0])
+    s = SampleResult(ids, phi, 0.75)
+    est = ht_estimate(tau, s)
+    scaled = tau / phi[ids]
+    var = np.sum((scaled - scaled.mean()) ** 2) / (6 * 5)
+    naive = t_critical_value(5, 0.95) * np.sqrt(var)
+    hardened = t_critical_value(1, 0.95) * np.sqrt(var)
+    assert est.error_bound == pytest.approx(hardened)
+    assert est.error_bound > naive
+
+
+def test_hh_zero_variance_on_optimal_phi():
+    """With phi exactly proportional to tau every scaled draw equals the
+    total, so a multi-shard sample gives a zero-width interval around
+    the *exact* answer — the paper's optimal-pps limit."""
+    rng = np.random.default_rng(5)
+    tau_s = np.array([4.0, 16.0, 60.0, 20.0])
+    phi = tau_s / tau_s.sum()
+    for _ in range(20):
+        s = pps_sample(phi, 0.9, rng)
+        if len(np.unique(s.shard_ids)) < 2:
+            continue
+        est = ht_estimate(tau_s[s.shard_ids], s)
+        assert est.value == pytest.approx(tau_s.sum())
+        assert est.error_bound == pytest.approx(0.0)
+
+
+@pytest.mark.parametrize("rate", [1e-9, 1.0, 2.5])
+def test_samplers_extreme_rates(rate):
+    """Rates at/below the one-shard limit and at/above census must stay
+    well-formed: sizes clamp, distinct sampling never repeats."""
+    from repro.core.sampling import pps_sample_distinct
+    rng = np.random.default_rng(3)
+    phi = similarity_probabilities(np.arange(6, dtype=float))
+    n_expect = max(1, int(np.ceil(rate * 6)))
+    s = pps_sample(phi, rate, rng)
+    assert len(s.shard_ids) == n_expect
+    d = pps_sample_distinct(phi, rate, rng)
+    assert len(d.shard_ids) == min(6, n_expect)
+    assert len(np.unique(d.shard_ids)) == len(d.shard_ids)
+    u = srcs_sample(6, rate, rng)
+    assert len(u.shard_ids) == n_expect
+
+
+def test_bootstrap_estimate_deterministic_and_degenerate():
+    from repro.core.sampling import bootstrap_estimate, SampleResult
+    phi = np.full(8, 1.0 / 8)
+    ids = np.array([0, 2, 4, 6])
+    vals = np.array([3.0, 9.0, 1.0, 5.0])
+    s = SampleResult(ids, phi, 0.5)
+    e1 = bootstrap_estimate(vals, s, rng=np.random.default_rng(7))
+    e2 = bootstrap_estimate(vals, s, rng=np.random.default_rng(7))
+    assert e1 == e2
+    assert e1.value == pytest.approx((vals / phi[ids]).mean())
+    assert np.isfinite(e1.error_bound) and e1.error_bound >= 0
+    one = bootstrap_estimate(np.array([3.0]),
+                             SampleResult(ids[:1], phi, 0.125), 0.95)
+    assert one.error_bound == float("inf")
+
+
+def test_bootstrap_topk_stability_bounds():
+    from repro.core.sampling import bootstrap_topk_stability
+    rng = np.random.default_rng(9)
+    # identical per-shard rankings: every resample reproduces the top-k
+    part = (np.array([5, 6, 7]), np.array([3.0, 2.0, 1.0]))
+    est = bootstrap_topk_stability([part, part, part], k=3, rng=rng)
+    assert est.value == pytest.approx(1.0)
+    # disjoint per-shard contributions: stability drops below 1
+    parts = [(np.array([i * 10, i * 10 + 1]), np.array([2.0, 1.0]))
+             for i in range(4)]
+    est2 = bootstrap_topk_stability(parts, k=3,
+                                    rng=np.random.default_rng(11))
+    assert 0.0 <= est2.value < 1.0
+    assert bootstrap_topk_stability([], 3).error_bound == float("inf")
