@@ -2,19 +2,23 @@
 
 Compares a freshly produced ``BENCH_serve.json`` against the committed
 baseline and fails (exit 1) when any floored row's throughput drops
-more than ``--tolerance`` (default 25%) below it.  Four rows are
+more than ``--tolerance`` (default 25%) below it.  Five rows are
 floored: ``batched_fused`` (the single-host fused batched path),
 ``batched_hosts2`` (the simulated 2-host placement path — locality
 split, per-host shared scans, cross-host gather), ``batched_lb2``
 (the balanced hot-host path: host 0 degraded, the replica-aware
 balancer sheds its shard groups onto ring replicas — this row's
 throughput collapses if the balancer stops shedding, because the
-injected per-shard delay then lands back on the critical path), and
+injected per-shard delay then lands back on the critical path),
 ``batched_budget`` (the planner-attached CI-carrying path: every
 query's rate planned from its error budget, every count answered with
 a Hansen-Hurwitz interval — this row's throughput collapses if
 planning or interval construction grows a per-query serialization
-point).  The
+point), and ``batched_chaos`` (the 2-host topology under a steady
+scripted ``FaultPlan``: uniform per-shard slowdowns plus a mildly
+flaky host — sleep-dominated, hence machine-stable, and it collapses
+if the injection seams grow per-task overhead or retries stop
+clearing transient faults).  The
 wide tolerance absorbs runner-to-runner CPU variance while still
 catching the real regressions this gate exists for: a serialization
 point sneaking back into the batched scoring path, postings caches
@@ -43,7 +47,8 @@ import sys
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
                                 "serve_smoke.json")
-DEFAULT_KEYS = "batched_fused,batched_hosts2,batched_lb2,batched_budget"
+DEFAULT_KEYS = ("batched_fused,batched_hosts2,batched_lb2,"
+                "batched_budget,batched_chaos")
 
 
 def check_key(current: dict, baseline: dict, key: str,

@@ -12,8 +12,10 @@ plus, when present, the ``load_sweep`` (static vs adaptive window
 sojourn across arrival rates), ``placement`` (simulated multi-host
 topology: residency split, gather parity, relative throughput) and
 ``balance`` (replica-aware hot-host balancing: primary vs balanced
-makespan, estimated vs realized per-host walls, shed counts) records,
-and the speedup scalars.  A record kind this report has no renderer
+makespan, estimated vs realized per-host walls, shed counts) and
+``chaos`` (the elastic-fleet scenario: scripted kill/join/drain phase
+makespans, parity and zero-loss gates, membership audit) records, and
+the speedup scalars.  A record kind this report has no renderer
 for prints a one-line shape summary instead of vanishing — earlier
 report versions silently dropped unknown kinds.
 """
@@ -155,7 +157,8 @@ def serve_section(serve: Dict) -> str:
     load_sweep / placement / balance records + speedup scalars; any
     record kind without a renderer still prints a one-line summary
     (nothing in the JSON is dropped on the floor)."""
-    rendered = {"config", "load_sweep", "placement", "balance", "budget"}
+    rendered = {"config", "load_sweep", "placement", "balance", "budget",
+                "chaos"}
     lines = ["## §Serving", ""]
     cfg = serve.get("config", {})
     if cfg:
@@ -313,6 +316,51 @@ def serve_section(serve: Dict) -> str:
                     + (f"{covs:.0%} |" if isinstance(covs, (int, float))
                        and covs == covs else "— |"))
         lines.append("")
+
+    ch = serve.get("chaos")
+    if ch:
+        parity = ch.get("parity", {})
+        fleet = ch.get("fleet", {})
+        fired = (ch.get("faults") or {}).get("fired", {})
+        lines += [
+            f"### Elastic-fleet chaos ({ch.get('hosts', '?')} hosts, "
+            f"{ch.get('n_replicas', 0)} replica, every host slowed "
+            f"{ch.get('slow_ms_per_shard', 0):.1f} ms/shard)",
+            "",
+            "Scripted kill -> serve-degraded -> join -> recover -> "
+            "drain scenario (seeded FaultPlan through FleetManager; "
+            "every gate below is a hard failure in CI):",
+            "",
+            "| phase | makespan ms |", "|---|---|"]
+        for phase, ms in (ch.get("phase_makespan_ms") or {}).items():
+            lines.append(f"| {phase} | {ms:.1f} |")
+        lines += [
+            "",
+            f"- lost queries **{ch.get('lost_queries', '?')}**, lost "
+            f"shards **{ch.get('lost_shards', '?')}** (floor: zero — "
+            f"one replica survives every scripted failure)",
+            "- gather parity vs single executor, all phases (kill "
+            "batch included): "
+            + ", ".join(f"{k}={v}" for k, v in parity.items()),
+            f"- kill landed: degraded makespan "
+            f"**{ch.get('degradation_ratio', float('nan')):.2f}x** "
+            f"healthy (floor 1.3x); post-join recovery "
+            f"**{ch.get('recovery_ratio', float('nan')):.2f}x** healthy "
+            f"(ceiling 1.25x)",
+            f"- joiner warmed **{ch.get('warmed_shards', '?')}** shards "
+            f"before residency; drain moved "
+            f"{(ch.get('drain') or {}).get('moved_shards', '?')} shards, "
+            f"orphaned "
+            f"{(ch.get('drain') or {}).get('orphaned_shards', '?')}",
+            f"- membership: {fleet.get('joins', 0)} join / "
+            f"{fleet.get('drains', 0)} drain / "
+            f"{fleet.get('crashes', 0)} crash, "
+            f"{fleet.get('placement_epoch', 0)} placement generations, "
+            f"live hosts {fleet.get('live_hosts')}",
+            "- faults fired (scenario): "
+            + ", ".join(f"{k}={v}" for k, v in fired.items()),
+            "",
+        ]
 
     unknown = [k for k in serve if k not in rendered]
     for k in unknown:

@@ -88,6 +88,24 @@ same mixed workload (aggregation / Boolean / ranked, paper Table I):
                     static-backpressure baseline on the same arrival
                     schedule and queue bound — and the baseline must
                     itself shed, or the arm failed to overload
+  batched_chaos   - (``--chaos``; always on under ``--smoke``) the
+                    batched engine through the 2-host topology under a
+                    steady scripted ``FaultPlan``: every host uniformly
+                    slowed ``CHAOS_SLOW_MS`` per shard scan (the row is
+                    sleep-dominated, hence machine-stable and floorable
+                    by the regression gate) and host 1 mildly flaky
+                    (deterministic seeded task faults, cleared by the
+                    executor's retry path).  Alongside it the bench
+                    emits a ``chaos`` record: an untimed scripted
+                    kill -> serve-degraded -> join -> recover -> drain
+                    scenario through ``FleetManager`` that *hard-fails*
+                    unless zero queries are lost, every batch (faulted
+                    ones included) gathers bit-for-bit the
+                    single-executor results, the post-join makespan
+                    recovers to within 1.25x the pre-crash baseline,
+                    the joiner was fully warmed before serving, and the
+                    planned drain orphans nothing (``--chaos-only``
+                    runs just this arm — the CI chaos-smoke job)
 
 Each mode runs ``trials`` times and the best wall time is reported
 (the container CPU is shared; best-of filters scheduler noise).
@@ -142,6 +160,14 @@ from benchmarks.common import csv_row, pick_query_words, text_setup
 # yet cheap enough that the whole arm stays in CI budget (the primary
 # arm pays it on ~half the union per job; the balanced arm sheds it)
 HOT_HOST_DELAY_S = 1e-2
+
+# uniform per-shard sleep injected on EVERY host in the chaos arms
+# (FaultPlan.slow): it makes job makespans sleep-dominated, so the
+# kill/recover makespan ratios and the batched_chaos row's throughput
+# are set by the scripted scenario, not by container CPU speed — the
+# property that lets the regression gate floor the chaos row and the
+# recovery hard-check run with a tight 1.25x bound
+CHAOS_SLOW_MS = 3.0
 
 
 def _hot_host_hook(host, shard_ids):
@@ -688,6 +714,138 @@ def _budget_report(corpus, index, queries, rate, executor, n_hosts,
         overload=arms)
 
 
+def _chaos_report(corpus, index, queries, rate, executor, n_hosts,
+                  workers, batch_size) -> dict:
+    """The elastic-fleet chaos record: one scripted, untimed
+    kill -> serve-degraded -> join -> recover -> drain scenario driven
+    by a seeded ``FaultPlan`` against a ``FleetManager``-managed
+    2-host topology, checked batch-by-batch against the
+    single-executor reference.  Hard gates (this runs under the CI
+    chaos-smoke job):
+
+      1. *Zero lost queries*: every query of every phase returns a
+         full-sample result — no partial estimates, no lost shards —
+         because one replica survives every scripted failure.
+      2. *Gather parity*: every batch, including the one that
+         discovers the kill mid-job and requeues on replicas, is
+         bit-for-bit the single-executor result (for counts that
+         equality covers the CI — so the planned drain provably never
+         widens an error bound).
+      3. *The kill landed*: the scripted crash fired and the
+         single-survivor phase's makespan degraded >= 1.3x the healthy
+         baseline (sleep-dominated, so the ratio is deterministic).
+      4. *Recovery*: after a warmed replacement host joins, mean job
+         makespan returns to within 1.25x the pre-crash baseline, and
+         every shard the joiner owns was streamed to it (``warm_fn``)
+         before residency swapped.
+      5. *Clean drain*: the planned departure moves every shard to a
+         live replica (nothing orphaned) and serving continues.
+    """
+    from repro.core.queries import QueryBatch
+    from repro.runtime import (FaultPlan, FleetManager, HostGroupExecutor,
+                               PlacementMap)
+    hg = HostGroupExecutor(
+        PlacementMap.blocked(corpus.n_shards, n_hosts, n_replicas=1),
+        workers_per_host=max(1, workers // n_hosts), allow_partial=True)
+    plan = FaultPlan(seed=7)
+    for h in range(n_hosts + 1):     # + the replacement host joined below
+        plan.slow(h, ms_per_shard=CHAOS_SLOW_MS)
+    plan.install(hg)
+    streamed = []
+    fleet = FleetManager(
+        hg, warm_fn=lambda sid, src, dst:
+        streamed.append([int(sid), int(src), int(dst)]))
+    engine = QueryBatch(corpus, index, executor=hg)
+    ref = QueryBatch(corpus, index, executor=executor)
+    chunks = [queries[i:i + batch_size]
+              for i in range(0, len(queries), batch_size)]
+    parity = {"count": True, "bool": True, "ranked": True}
+    lost_queries = 0
+    job_i = 0
+    phase_ms = {}
+
+    def run_phase(name, n_batches):
+        nonlocal job_i, lost_queries
+        makespans = []
+        for _ in range(n_batches):
+            chunk = chunks[job_i % len(chunks)]
+            seed = 3000 + job_i
+            got = engine.execute(chunk, rate,
+                                 rng=np.random.default_rng(seed))
+            want = ref.execute(chunk, rate,
+                               rng=np.random.default_rng(seed))
+            for kind, ok in _gather_parity(chunk, got, want).items():
+                parity[kind] &= ok
+            if engine.last_degraded is not None:
+                lost_queries += engine.last_degraded["degraded_queries"]
+            makespans.append(max(
+                hg.last_job["per_host_wall_s"].values(), default=0.0))
+            job_i += 1
+        # best-of over the phase's batches, same reason the throughput
+        # arms take best-of wall time: the sleeps make the true value
+        # deterministic, and a container scheduler stall only ever adds
+        phase_ms[name] = float(np.min(makespans)) * 1e3
+
+    engine.execute(chunks[0], rate, rng=np.random.default_rng(2999))  # warm
+    run_phase("healthy", 2)
+    # the kill: host 1 dies NOW (every group job from here on raises);
+    # the next batch discovers it mid-job and requeues on replicas
+    plan.crash(1, at_job=int(hg.stats["jobs"]))
+    run_phase("kill", 1)
+    fleet.crash(1)                  # the failure detector catches up
+    run_phase("degraded", 2)
+    # replacement host (fresh id — the dead slot stays scripted-dead):
+    # shards stream to it via warm_fn, then the generation swaps
+    join_ev = fleet.join(n_hosts)
+    run_phase("recovered", 2)
+    # planned departure of the replacement: metadata-only handoff back
+    # to live replicas before it leaves rotation
+    drain_ev = fleet.drain(n_hosts)
+    run_phase("drained", 1)
+
+    record = dict(
+        hosts=n_hosts, n_replicas=1, slow_ms_per_shard=CHAOS_SLOW_MS,
+        phase_makespan_ms=phase_ms,
+        degradation_ratio=phase_ms["degraded"] / max(phase_ms["healthy"],
+                                                     1e-9),
+        recovery_ratio=phase_ms["recovered"] / max(phase_ms["healthy"],
+                                                   1e-9),
+        parity=parity, lost_queries=lost_queries,
+        lost_shards=int(hg.stats["lost_shards"]),
+        warmed_shards=len(streamed), streamed=streamed,
+        join=join_ev, drain=drain_ev,
+        fleet=fleet.record(), faults=plan.record(),
+    )
+    hg.close()
+    if lost_queries or record["lost_shards"]:
+        raise RuntimeError(
+            f"chaos scenario lost work: {lost_queries} degraded queries, "
+            f"{record['lost_shards']} lost shards (every scripted failure "
+            f"leaves a live replica — nothing may be lost)")
+    if not all(parity.values()):
+        raise RuntimeError(f"chaos gather parity violated: {parity}")
+    if plan.fired["crash"] < 1:
+        raise RuntimeError("the scripted kill never fired — the scenario "
+                           "did not exercise the requeue path")
+    if record["degradation_ratio"] < 1.3:
+        raise RuntimeError(
+            f"single-survivor makespan did not degrade: "
+            f"{phase_ms['degraded']:.1f} ms vs healthy "
+            f"{phase_ms['healthy']:.1f} ms — the kill did not land")
+    if record["recovery_ratio"] > 1.25:
+        raise RuntimeError(
+            f"post-join makespan did not recover: {phase_ms['recovered']:.1f}"
+            f" ms vs healthy {phase_ms['healthy']:.1f} ms "
+            f"(> 1.25x)")
+    if not streamed or join_ev["warmed_shards"] != len(streamed):
+        raise RuntimeError(
+            f"join warm-up mismatch: audit says {join_ev['warmed_shards']} "
+            f"warmed, warm_fn saw {len(streamed)}")
+    if drain_ev["orphaned_shards"] or not drain_ev["planned"]:
+        raise RuntimeError(f"drain was not clean: {drain_ev}")
+    return record
+
+
 def run_sweep(corpus, index, queries, rate, executor, batch_size) -> list:
     """Static-vs-adaptive window sojourn across arrival rates.
 
@@ -776,20 +934,27 @@ def run_sweep(corpus, index, queries, rate, executor, batch_size) -> list:
 def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
         workers: int = 2, trials: int = 3, out_path: str = None,
         smoke: bool = False, sweep: bool = False, hosts: int = 0,
-        replicas: int = 1) -> dict:
+        replicas: int = 1, chaos: bool = False,
+        chaos_only: bool = False) -> dict:
+    chaos = chaos or chaos_only
     if smoke:
         # CI budget: tiny corpus, short PV training.  The arms
         # themselves cost milliseconds next to the setup, so 5 trials
         # buy the bench-regression gate a stable best-of measurement
         # for free.  The smoke run always carries the 2-host simulated
         # topology — its row is floored by the regression gate and its
-        # parity/residency checks are hard failures.
+        # parity/residency checks are hard failures — and the chaos
+        # arm (scripted kill/join/drain scenario + the batched_chaos
+        # row the gate also floors).
         setup = text_setup(tag="smoke", n_docs=400, vocab=2048, topics=8,
                            dim=24, steps=150, bits=128)
         n_queries, batch_size, trials = 48, 12, 5
         hosts = hosts or 2
+        chaos = True
     else:
         setup = text_setup()
+    if chaos and hosts < 2:
+        hosts = 2
     corpus, index = setup["corpus"], setup["index"]
     # doc-granular variant of the same index: planning scores against
     # every doc and reduces to shards through the fused path — the
@@ -805,7 +970,7 @@ def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
     rng = np.random.default_rng(11)
     queries = _mixed_queries(corpus, n_queries, rng)
 
-    arms = {
+    arms = {} if chaos_only else {
         "per_query_scan": lambda seed: _run_per_query_scan(
             corpus, index, queries, rate, executor, seed),
         "per_query": lambda seed: _run_per_query(
@@ -817,21 +982,42 @@ def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
         "windowed": lambda seed: _run_windowed(
             corpus, index, queries, rate, executor, seed, batch_size),
     }
-    # the error-budgeted engine: per-query SLOs through a RatePlanner,
-    # bootstrap CIs on (one engine reused across trials, like the
-    # balanced arm, so the warm pass is where the error curves fit and
-    # measured trials run the learned plans)
-    from repro.core.queries import QueryBatch
-    from repro.runtime import RatePlanner
-    budget_engine = QueryBatch(corpus, index, executor=executor,
-                               planner=RatePlanner(corpus.n_shards),
-                               ci=True)
-    budget_queries = _budgeted_queries(queries)
-    arms["batched_budget"] = lambda seed: _run_batched(
-        corpus, index, budget_queries, rate, executor, seed, batch_size,
-        engine=budget_engine)
+    if not chaos_only:
+        # the error-budgeted engine: per-query SLOs through a
+        # RatePlanner, bootstrap CIs on (one engine reused across
+        # trials, like the balanced arm, so the warm pass is where the
+        # error curves fit and measured trials run the learned plans)
+        from repro.core.queries import QueryBatch
+        from repro.runtime import RatePlanner
+        budget_engine = QueryBatch(corpus, index, executor=executor,
+                                   planner=RatePlanner(corpus.n_shards),
+                                   ci=True)
+        budget_queries = _budgeted_queries(queries)
+        arms["batched_budget"] = lambda seed: _run_batched(
+            corpus, index, budget_queries, rate, executor, seed, batch_size,
+            engine=budget_engine)
+    chaos_exec = chaos_plan = None
+    if chaos:
+        # the chaos-hardened topology under a steady scripted fault
+        # load: every host uniformly slowed (sleep-dominated, so the
+        # row is machine-stable) and host 1 mildly flaky, so the row
+        # prices the injection seams + the deterministic retry path on
+        # the batched hot path.  Floored by the regression gate — it
+        # collapses if fault handling grows a serialization point.
+        from repro.runtime import (FaultPlan, HostGroupExecutor,
+                                   PlacementMap)
+        chaos_exec = HostGroupExecutor(
+            PlacementMap.blocked(corpus.n_shards, hosts,
+                                 n_replicas=max(1, replicas)),
+            workers_per_host=max(1, workers // hosts))
+        chaos_plan = FaultPlan(seed=11).flaky(1, error_rate=0.05)
+        for h in range(hosts):
+            chaos_plan.slow(h, ms_per_shard=CHAOS_SLOW_MS)
+        chaos_plan.install(chaos_exec)
+        arms["batched_chaos"] = lambda seed: _run_batched(
+            corpus, index, queries, rate, chaos_exec, seed, batch_size)
     host_exec = lb_exec = None
-    if hosts >= 2:
+    if hosts >= 2 and not chaos_only:
         from repro.runtime import HostGroupExecutor, PlacementMap
         # same total worker threads as the single-host arms: the row
         # measures placement overhead, not extra parallelism
@@ -884,7 +1070,18 @@ def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
         csv_row(f"serve_{name}", 1e6 * best / n_queries,
                 f"qps={report[name]['qps']:.1f}")
 
-    if hosts >= 2:
+    if chaos:
+        report["chaos"] = _chaos_report(
+            corpus, index, queries, rate, executor, hosts, workers,
+            batch_size)
+        report["chaos"]["timed_row_faults"] = chaos_plan.record()
+        chaos_exec.close()
+        csv_row(f"serve_chaos_hosts{hosts}", 0.0,
+                f"recovery {report['chaos']['recovery_ratio']:.2f}x, "
+                f"lost {report['chaos']['lost_queries']}, "
+                f"warmed {report['chaos']['warmed_shards']}")
+
+    if hosts >= 2 and not chaos_only:
         report["placement"] = _placement_report(
             corpus, index, queries, rate, executor, hosts, workers,
             batch_size)
@@ -915,24 +1112,27 @@ def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
         report["load_sweep"] = run_sweep(corpus, index, queries, rate,
                                          executor, batch_size)
 
-    report["speedup_batched_vs_per_query"] = (
-        report["per_query"]["wall_s"] / report["batched"]["wall_s"])
-    report["speedup_batched_vs_scan"] = (
-        report["per_query_scan"]["wall_s"] / report["batched"]["wall_s"])
-    report["speedup_fused_vs_per_query"] = (
-        report["per_query"]["wall_s"] / report["batched_fused"]["wall_s"])
+    if not chaos_only:
+        report["speedup_batched_vs_per_query"] = (
+            report["per_query"]["wall_s"] / report["batched"]["wall_s"])
+        report["speedup_batched_vs_scan"] = (
+            report["per_query_scan"]["wall_s"] / report["batched"]["wall_s"])
+        report["speedup_fused_vs_per_query"] = (
+            report["per_query"]["wall_s"]
+            / report["batched_fused"]["wall_s"])
+        csv_row("serve_speedup_batched_vs_per_query", 0.0,
+                f"{report['speedup_batched_vs_per_query']:.2f}x")
+        csv_row("serve_speedup_batched_vs_scan", 0.0,
+                f"{report['speedup_batched_vs_scan']:.2f}x")
+        csv_row("serve_speedup_fused_vs_per_query", 0.0,
+                f"{report['speedup_fused_vs_per_query']:.2f}x")
     report["config"] = dict(n_queries=n_queries, rate=rate,
                             batch_size=batch_size, workers=workers,
                             trials=trials, n_shards=corpus.n_shards,
                             n_docs=corpus.n_docs, smoke=smoke,
                             hosts=hosts, replicas=replicas,
+                            chaos=chaos, chaos_only=chaos_only,
                             executor_stats=dict(executor.stats))
-    csv_row("serve_speedup_batched_vs_per_query", 0.0,
-            f"{report['speedup_batched_vs_per_query']:.2f}x")
-    csv_row("serve_speedup_batched_vs_scan", 0.0,
-            f"{report['speedup_batched_vs_scan']:.2f}x")
-    csv_row("serve_speedup_fused_vs_per_query", 0.0,
-            f"{report['speedup_fused_vs_per_query']:.2f}x")
     executor.close()
 
     out_path = out_path or os.environ.get("BENCH_SERVE_JSON",
@@ -959,7 +1159,17 @@ if __name__ == "__main__":
     ap.add_argument("--replicas", type=int, default=1,
                     help="ring replicas per shard in the placement arms "
                          "(the balanced hot-host arm needs >= 1)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="add the elastic-fleet chaos arm: the scripted "
+                         "kill/join/drain scenario record (hard-gated) "
+                         "plus the batched_chaos throughput row "
+                         "(--smoke always includes it)")
+    ap.add_argument("--chaos-only", action="store_true",
+                    help="run ONLY the chaos arm (the CI chaos-smoke "
+                         "job): scenario record + batched_chaos row, "
+                         "skipping every other arm")
     ap.add_argument("--out", default=None, help="output json path")
     args = ap.parse_args()
     run(smoke=args.smoke, sweep=args.sweep, hosts=args.hosts,
-        replicas=args.replicas, out_path=args.out)
+        replicas=args.replicas, chaos=args.chaos,
+        chaos_only=args.chaos_only, out_path=args.out)

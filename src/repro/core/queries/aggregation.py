@@ -35,6 +35,10 @@ class PhraseCountResult(NamedTuple):
     shards_read: int
     n_shards: int
     elapsed_s: float
+    # planned-but-unreachable shards (every replica dead): the reduce
+    # ran over the surviving sample with a widened CI (batch engine
+    # with allow_partial executors; always 0 on the healthy path)
+    lost_shards: int = 0
 
     @property
     def data_fraction(self) -> float:

@@ -189,6 +189,11 @@ class QueryBatch:
         # planner is set (planned vs realized per-query rates/errors,
         # degradation pressure) — None otherwise
         self.last_budget: Optional[Dict[str, Any]] = None
+        # the degradation record of the most recent execute() call,
+        # when the executor returned a partial gather (shards lost to
+        # dead hosts with no live replica): total lost shards and the
+        # per-query breakdown — None on the healthy path
+        self.last_degraded: Optional[Dict[str, Any]] = None
 
     @property
     def accepts_pressure(self) -> bool:
@@ -334,9 +339,28 @@ class QueryBatch:
             self.last_audit = None
             job = None
 
+        # partial gather (allow_partial executors only): shards whose
+        # hosts all died never produced results — each affected query
+        # reduces over its surviving sample with a widened CI instead
+        # of the whole batch aborting
+        lost_total = (int(job.get("lost_shards", 0))
+                      if isinstance(job, dict) else 0)
+        lost_per_query = [0] * len(queries)
+        if lost_total:
+            lost_per_query = [
+                sum(1 for s in plan[i] if int(s) not in per_query[i])
+                for i in range(len(queries))]
+            self.last_degraded = dict(
+                lost_shards=lost_total,
+                degraded_queries=sum(1 for n in lost_per_query if n),
+                lost_per_query=lost_per_query)
+        else:
+            self.last_degraded = None
+
         elapsed = time.perf_counter() - t0
         results = [self._reduce(q, samples[i], plan[i], per_query[i],
-                                elapsed, rates[i] >= 1.0)
+                                elapsed, rates[i] >= 1.0,
+                                lost=lost_per_query[i])
                    for i, q in enumerate(queries)]
         self._feedback(queries, rates, results, audit, job)
         return results
@@ -368,6 +392,9 @@ class QueryBatch:
                     else self.confidence)
             self.planner.observe_result(q.kind, r, est.n, rel, conf)
         audit.realized_rel_error = realized
+        if self.last_degraded is not None:
+            audit.partial_queries = self.last_degraded["degraded_queries"]
+            audit.lost_shards = self.last_degraded["lost_shards"]
         self.last_budget = audit.record()
         if isinstance(job, dict):
             job["budget"] = self.last_budget
@@ -388,20 +415,39 @@ class QueryBatch:
 
     def _reduce(self, q: BatchQuery, sample: SampleResult,
                 distinct: np.ndarray, by_shard: Dict[int, Any],
-                elapsed: float, precise: bool) -> Any:
+                elapsed: float, precise: bool, lost: int = 0) -> Any:
         n_shards = self.corpus.n_shards
         conf = (q.budget.confidence if q.budget is not None
                 else self.confidence)
+        if lost:
+            # degraded reduce: drop the unreachable shards from the
+            # sample and the visit set and run the normal estimators
+            # over the survivors.  Host loss is independent of shard
+            # values, so Hansen-Hurwitz over the surviving draws stays
+            # unbiased — the CI simply widens with the smaller sample
+            # (fewer draws, fewer distinct shards of t-df).  A census
+            # that lost shards is no longer precise: it degrades to
+            # the same surviving-sample estimator.
+            keep = np.asarray([int(s) in by_shard
+                               for s in sample.shard_ids], bool)
+            sample = SampleResult(sample.shard_ids[keep],
+                                  sample.probabilities, sample.rate)
+            distinct = np.asarray([s for s in distinct
+                                   if int(s) in by_shard], np.int64)
+            precise = False
         if q.kind == "count":
             if precise:
                 total = float(sum(by_shard.values()))
                 est = Estimate(total, 0.0, conf, n_shards)
+            elif len(sample.shard_ids) == 0:
+                # every draw lost: no information, infinite bound
+                est = Estimate(0.0, float("inf"), conf, 0)
             else:
                 local = np.asarray([by_shard[int(s)]
                                     for s in sample.shard_ids], np.float64)
                 est = ht_estimate(local, sample, conf)
             return PhraseCountResult(est, sample, len(distinct), n_shards,
-                                     elapsed)
+                                     elapsed, lost)
         if q.kind == "bool":
             hits = [by_shard[int(s)] for s in distinct]
             doc_ids = (np.concatenate(hits) if hits
@@ -422,7 +468,7 @@ class QueryBatch:
                         local, sample, conf,
                         rng=np.random.default_rng(len(distinct)))
             return RetrievalResult(np.unique(doc_ids), sample, len(distinct),
-                                   n_shards, elapsed, est)
+                                   n_shards, elapsed, est, lost)
         parts = [by_shard[int(s)] for s in distinct]
         if parts:
             ids = np.concatenate([p[0] for p in parts])
@@ -439,4 +485,4 @@ class QueryBatch:
                     parts, q.k, conf,
                     rng=np.random.default_rng(len(distinct)))
         return RankedResult(ids[order], sc[order], sample, len(distinct),
-                            n_shards, elapsed, est)
+                            n_shards, elapsed, est, lost)

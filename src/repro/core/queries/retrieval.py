@@ -149,6 +149,9 @@ class RetrievalResult(NamedTuple):
     # result-size estimate with bootstrap CI (batch engine with CIs
     # enabled; None from the single-query path / with CIs off)
     estimate: Optional["Estimate"] = None
+    # planned-but-unreachable shards (every replica dead) — the union
+    # ran over survivors only; always 0 on the healthy path
+    lost_shards: int = 0
 
     @property
     def data_fraction(self) -> float:
@@ -278,6 +281,9 @@ class RankedResult(NamedTuple):
     # the sampled shards reproduces this top-k (batch engine with CIs
     # enabled; None from the single-query path / with CIs off)
     estimate: Optional["Estimate"] = None
+    # planned-but-unreachable shards (every replica dead) — the top-k
+    # merged survivors only; always 0 on the healthy path
+    lost_shards: int = 0
 
     @property
     def data_fraction(self) -> float:

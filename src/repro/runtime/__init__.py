@@ -21,6 +21,12 @@
                    the paper's variance model / fitted error curves to
                    pick the smallest per-query sampling rate meeting
                    each budget
+  ``fleet``      — elastic membership (``FleetManager``): host
+                   join/drain/crash as first-class, audited operations
+                   over the placement layer
+  ``chaos``      — deterministic fault injection (``FaultPlan``): a
+                   seeded, scripted scenario DSL compiled onto the
+                   executors' injection seams
 
 The multi-host dataflow is placement -> balance -> executor: the
 ``PlacementMap`` bounds where a shard *may* run (primary + live ring
@@ -56,6 +62,53 @@ thresholds, mirroring ``balance``'s asymmetric band), and every
 degradation decision lands in a ``BudgetAudit`` on
 ``last_job["budget"]`` the way balance decisions land on
 ``last_job["balance"]``.
+
+Fleet lifecycle (``fleet``) rides the same dataflow.  Membership is a
+*generation swap*: ``FleetManager`` builds the next ``PlacementMap``
+off-line and installs it with ``set_placement`` — every job captures
+the placement reference at job start (RCU-style), so in-flight jobs
+finish on their old generation while the next job sees the new one,
+and serving never pauses.  The three operations share one
+residency-transfer path — a drain is a crash you saw coming:
+
+  ``join``   warm first, serve second: every shard the joiner will own
+             streams from its current holder (``warm_fn``), and only
+             then does the generation swap; the joiner enters the
+             ``HostLoadModel`` at the fleet median
+  ``drain``  transfer residency to live replicas, then retire — zero
+             queries shed, no CI widened (planned=True in the audit)
+  ``crash``  retire first (in-flight jobs discover the loss through
+             their fault hooks and requeue on replicas), then the same
+             transfer with planned=False; shards with no live replica
+             orphan and — under ``allow_partial`` — degrade queries to
+             partial-sample estimates with widened CIs instead of
+             failing (they revive if the slot rejoins)
+
+Every scenario above is testable without wall-clock races via
+``chaos``: a ``FaultPlan`` is a seeded script compiled onto the
+executors' hooks, its clock the executor's own job counter.  Cookbook:
+
+    plan = (FaultPlan(seed=7)
+            .crash(1, at_job=3)           # host 1 dies at group job 3
+            .slow(0, ms_per_shard=5)      # host 0 always degraded
+            .flaky(2, error_rate=0.1,
+                   jobs=range(4, 8))      # transient faults, jobs 4-7
+            .stall(0, s=0.2, jobs=[5]))   # one long pause (deadlines)
+    plan.install(host_group)              # or a bare ShardTaskExecutor
+    ...
+    plan.record()                         # scripted + fired, JSON-ready
+
+Flaky decisions draw from a counter-based stream keyed on
+``(seed, host, shard, job, attempt)`` — independent of thread
+interleaving, identical across runs and machines; a retried shard
+redraws and can deterministically recover.  The executor side holds up
+its end with bounded-exponential retry backoff, per-job deadlines
+(``job_deadline_s``), graceful partials (``allow_partial``), and a
+job-epoch guard that drops zombie completions from abandoned jobs.
+The serving bench's chaos arm replays kill -> degrade -> join ->
+recover -> drain against all of this and hard-gates zero lost queries,
+bit-for-bit gather parity, and post-join makespan recovery
+(``benchmarks/serve_bench.py --chaos``).
 """
 from repro.runtime.balance import (  # noqa: F401
     BalanceConfig,
@@ -74,7 +127,9 @@ from repro.runtime.controller import (  # noqa: F401
     WindowController,
     WindowPlan,
 )
+from repro.runtime.chaos import FaultPlan  # noqa: F401
 from repro.runtime.executor import ShardTaskExecutor  # noqa: F401
+from repro.runtime.fleet import FleetManager  # noqa: F401
 from repro.runtime.placement import (  # noqa: F401
     HostFailure,
     HostGroupExecutor,

@@ -142,6 +142,29 @@ class HostLoadModel:
         with self._lock:
             return list(self._cost)
 
+    # ------------------------------------------------------------------
+    # fleet membership (see runtime/fleet.FleetManager)
+    # ------------------------------------------------------------------
+    def ensure_hosts(self, n_hosts: int) -> None:
+        """Grow the model to at least ``n_hosts`` slots.  A joining
+        host arrives with no telemetry (None), so ``shard_cost`` prices
+        it at the fleet median — neither feared nor favored until its
+        own realized walls arrive."""
+        with self._lock:
+            n = int(n_hosts)
+            if n > self.n_hosts:
+                self._cost.extend([None] * (n - self.n_hosts))
+                self.n_hosts = n
+
+    def forget_host(self, host: int) -> None:
+        """Drop a departed host's telemetry (crash or drain): if the
+        host id ever rejoins it re-enters at the fleet median instead
+        of a stale EWMA from its previous life."""
+        with self._lock:
+            h = int(host)
+            if 0 <= h < self.n_hosts:
+                self._cost[h] = None
+
 
 @dataclasses.dataclass
 class BalanceAudit:
@@ -190,6 +213,7 @@ def plan_split(
     dead: frozenset = frozenset(),
     hysteresis: Optional[float] = None,
     update_state: bool = True,
+    orphans: Optional[List[int]] = None,
 ) -> BalanceAudit:
     """Cost-aware, residency-preserving split of ``shard_ids``.
 
@@ -205,14 +229,21 @@ def plan_split(
     hysteresis state: a mid-job failure requeue splits only the dead
     host's small group, and letting that degenerate subset flip
     ``balanced_mode`` would make a transient host loss reset the
-    band — the flap the state exists to prevent."""
+    band — the flap the state exists to prevent.
+
+    ``orphans`` mirrors ``PlacementMap.split``: when given, shards
+    with no live host are appended there and dropped from the plan
+    instead of raising ``HostFailure``."""
     if hysteresis is None:
         hysteresis = load.config.hysteresis
     ids = [int(s) for s in shard_ids]
     # the residency split both seeds the comparison and performs the
-    # orphan check (HostFailure) so the two split flavors cannot
-    # disagree about liveness
-    base = placement.split(ids, dead)
+    # orphan check (HostFailure / orphan collection) so the two split
+    # flavors cannot disagree about liveness
+    base = placement.split(ids, dead, orphans=orphans)
+    if orphans:
+        dropped = set(orphans)
+        ids = [s for s in ids if s not in dropped]
     cost = {h: load.shard_cost(h)
             for h in range(placement.n_hosts) if h not in dead}
     est_base = _makespan(base, cost)

@@ -181,6 +181,11 @@ class BudgetAudit:
     est_rel_error: List[Optional[float]]      # planner's prediction
     realized_rel_error: List[Optional[float]] = dataclasses.field(
         default_factory=list)            # filled after execution
+    # filled after execution when the gather came back partial (hosts
+    # lost with no live replica): queries whose reduce ran over a
+    # smaller surviving sample, and the total shards they lost
+    partial_queries: int = 0
+    lost_shards: int = 0
 
     @property
     def degraded(self) -> int:
@@ -210,7 +215,9 @@ class BudgetAudit:
             undegraded_rates=[float(r) for r in self.undegraded_rates],
             floors=[float(f) for f in self.floors],
             est_rel_error=clean(self.est_rel_error),
-            realized_rel_error=clean(self.realized_rel_error))
+            realized_rel_error=clean(self.realized_rel_error),
+            partial_queries=self.partial_queries,
+            lost_shards=self.lost_shards)
 
 
 class RatePlanner:

@@ -3,7 +3,18 @@
 This is the Spark-executor analogue for EmApprox query jobs: per-shard
 tasks run on a worker pool with
 
-  * retry on failure (transient worker faults),
+  * retry on failure (transient worker faults) with *bounded
+    exponential backoff*: the ``r``-th retry of a shard waits
+    ``retry_backoff_s * 2**(r-1)`` (capped at ``retry_backoff_cap_s``)
+    before resubmitting, so a flaky dependency is not hammered at
+    queue speed,
+  * a per-job deadline (``job_deadline_s``): a job that cannot finish
+    in time stops retrying and — with ``allow_partial=True`` — returns
+    the shards it *did* complete, recording the rest on
+    ``last_job["lost_shards"]`` so the query layer can degrade to a
+    partial-sample estimate with a widened CI instead of failing the
+    whole batch (without ``allow_partial`` the deadline raises
+    ``ShardTaskError`` exactly like exhausted retries),
   * straggler mitigation: when the slowest ~tail of tasks exceeds
     ``straggler_factor``x the median completion time, duplicates are
     speculatively launched and the first finisher wins (the classic
@@ -47,9 +58,23 @@ scatter back per query) is ``run_shared_scan`` — one definition shared
 by this executor, the placement layer's per-host scans, and the
 executor-less inline fallback in ``core/queries/batch.py``, so the
 schedules cannot diverge.
+
+Fault injection has two first-class seams, both consumed by the
+``runtime/chaos`` FaultPlan compiler: ``fault_hook(shard_id, attempt)``
+(the legacy raise-to-fail hook) and ``task_hook(shard_id, attempt,
+job)`` — the per-shard-task hook carrying the executor's job index, so
+a scripted plan can target "shard tasks during jobs 3..5" without
+keeping its own clock.  ``job_hook(job)`` fires once at job start.
+
+Completions are tagged with a *job epoch*: a job abandoned at its
+deadline leaves speculative/stalled futures running on the warm pool,
+and when those finish late their completion records carry the old
+epoch and are dropped (``stats["stale_completions"]``) instead of
+polluting a later job's accounting.
 """
 from __future__ import annotations
 
+import heapq
 import queue
 import threading
 import time
@@ -117,12 +142,32 @@ class ShardTaskExecutor:
         min_straggler_s: float = 0.05,
         adaptive_workers: bool = False,
         gil_floor_s: float = 1e-3,
+        retry_backoff_s: float = 0.0,
+        retry_backoff_cap_s: float = 1.0,
+        job_deadline_s: Optional[float] = None,
+        allow_partial: bool = False,
+        task_hook: Optional[Callable[[int, int, int], None]] = None,
+        job_hook: Optional[Callable[[int], None]] = None,
     ):
         self.workers = workers
         self.max_retries = max_retries
         self.straggler_factor = straggler_factor
         self.min_completed = min_completed_for_speculation
         self.fault_hook = fault_hook  # (shard_id, attempt) -> None or raise
+        # chaos seams: per-shard-task hook with the executor's job index
+        # (slow/flaky injection at task granularity) and a job-start
+        # hook (lets a FaultPlan injector advance its clock)
+        self.task_hook = task_hook    # (shard_id, attempt, job)
+        self.job_hook = job_hook      # (job) at job start
+        # attempt k of a failed shard waits backoff * 2^(k-1) (capped)
+        # before resubmission; 0.0 keeps the legacy immediate retry
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.retry_backoff_cap_s = float(retry_backoff_cap_s)
+        # a job that cannot finish by its deadline stops retrying; with
+        # allow_partial it returns what completed (lost shards recorded
+        # on last_job), otherwise it raises like exhausted retries
+        self.job_deadline_s = job_deadline_s
+        self.allow_partial = bool(allow_partial)
         # Floor on the speculation threshold: when the median task time
         # is below the scheduler's own tick (tasks of ~100 us at batch
         # scale), 3x the median is noise-level and speculation would
@@ -132,7 +177,19 @@ class ShardTaskExecutor:
         self.adaptive_workers = adaptive_workers
         self.gil_floor_s = gil_floor_s
         self.stats: Dict[str, int] = {"retries": 0, "speculative": 0,
-                                      "jobs": 0, "pool_rebuilds": 0}
+                                      "jobs": 0, "pool_rebuilds": 0,
+                                      "lost_shards": 0,
+                                      "stale_completions": 0}
+        # job epoch: bumped at every job start; completion records are
+        # tagged with it so futures abandoned by a deadline-expired job
+        # are recognizably stale when they finish late.  The completions
+        # queue is instance-level (not job-local) and jobs are
+        # serialized on _job_lock, so a zombie future's late completion
+        # lands in a *live* loop where the epoch guard can count and
+        # drop it instead of vanishing into a dead queue.
+        self._job_epoch = 0
+        self._job_lock = threading.Lock()
+        self._completions: "queue.Queue[tuple]" = queue.Queue()
         # per-job service-time telemetry for the last completed job —
         # the window controller reads this to attribute batch cost to
         # the shared scan (wall_s) vs engine overhead; see
@@ -219,7 +276,10 @@ class ShardTaskExecutor:
         """
         pool = self._acquire_pool()
         try:
-            return self._run_job(pool, corpus, shard_ids, fn)
+            # jobs are serialized: the epoch guard on the shared
+            # completions queue assumes one live job owns the loop
+            with self._job_lock:
+                return self._run_job(pool, corpus, shard_ids, fn)
         finally:
             self._release_pool()
 
@@ -232,6 +292,13 @@ class ShardTaskExecutor:
     ) -> Dict[int, Any]:
         ids = [int(s) for s in shard_ids]
         t_job = time.perf_counter()
+        deadline = (t_job + self.job_deadline_s
+                    if self.job_deadline_s is not None else None)
+        self._job_epoch += 1
+        epoch = self._job_epoch
+        job = self.stats["jobs"]
+        if self.job_hook is not None:
+            self.job_hook(job)
         results: Dict[int, Any] = {}
         attempts: Dict[int, int] = {i: 0 for i in ids}
         lock = threading.Lock()
@@ -252,12 +319,16 @@ class ShardTaskExecutor:
                 live[sid][attempt] = time.perf_counter()
             if self.fault_hook is not None:
                 self.fault_hook(sid, attempt)
+            if self.task_hook is not None:
+                self.task_hook(sid, attempt, job)
             return fn(corpus.shards[sid])
 
-        completions: "queue.Queue[tuple]" = queue.Queue()
+        completions = self._completions
         in_flight = 0
         durations: list = []
         speculated: set = set()
+        # retries waiting out their backoff: heap of (due_time, sid)
+        delayed: list = []
 
         def submit(sid: int) -> None:
             nonlocal in_flight
@@ -267,8 +338,20 @@ class ShardTaskExecutor:
             fut = pool.submit(run_one, sid, attempt)
             fut.add_done_callback(
                 lambda f, sid=sid, a=attempt: completions.put(
-                    (sid, a, f)))
+                    (epoch, sid, a, f)))
             in_flight += 1
+
+        def schedule_retry(sid: int) -> None:
+            """The r-th retry of a shard waits backoff * 2^(r-1)
+            (capped) before resubmission; zero backoff resubmits
+            immediately, the legacy behavior."""
+            self.stats["retries"] += 1
+            if self.retry_backoff_s <= 0.0:
+                submit(sid)
+                return
+            delay = min(self.retry_backoff_cap_s,
+                        self.retry_backoff_s * 2.0 ** (attempts[sid] - 1))
+            heapq.heappush(delayed, (time.perf_counter() + delay, sid))
 
         last_check = time.perf_counter()
 
@@ -297,15 +380,47 @@ class ShardTaskExecutor:
         # exception escapes — the old per-job pool got this quiescence
         # from its `with` shutdown; the shared warm pool must not be
         # left running zombie tasks that would queue-jam the next job.
+        # A *deadline* expiry is the one exception: draining would let a
+        # stalled task hold the job hostage past its own time bound, so
+        # the job abandons its in-flight futures on the warm pool and
+        # the epoch guard disposes of their late completions.
         fatal: Optional[ShardTaskError] = None
+        lost: set = set()
+        timed_out = False
         for sid in ids:
             submit(sid)
-        while in_flight:
+        while in_flight or delayed:
+            now = time.perf_counter()
+            if fatal is None and deadline is not None and now >= deadline:
+                timed_out = True
+                break
+            if fatal is None:
+                while delayed and delayed[0][0] <= now:
+                    _, sid = heapq.heappop(delayed)
+                    submit(sid)
+                if not in_flight and not delayed:
+                    break
+            timeout = 0.05
+            if delayed and fatal is None:
+                timeout = min(timeout, max(1e-4, delayed[0][0] - now))
+            if deadline is not None and fatal is None:
+                timeout = min(timeout, max(1e-4, deadline - now))
+            if not in_flight:
+                if fatal is not None:
+                    break          # only delayed retries left: drop them
+                time.sleep(timeout)
+                continue
             try:
-                sid, attempt, fut = completions.get(timeout=0.05)
+                rec_epoch, sid, attempt, fut = completions.get(
+                    timeout=timeout)
             except queue.Empty:
                 if fatal is None:
                     check_stragglers(time.perf_counter())
+                continue
+            if rec_epoch != epoch:
+                # zombie from an abandoned (deadline-expired) earlier
+                # job finishing late — drop, never decrement in_flight
+                self.stats["stale_completions"] += 1
                 continue
             in_flight -= 1
             now = time.perf_counter()
@@ -316,6 +431,7 @@ class ShardTaskExecutor:
                 if sid not in results:
                     results[sid] = res
                     durations.append(now - t_start)
+                    lost.discard(sid)   # late speculative success
             except Exception:
                 with lock:
                     live[sid].pop(attempt, None)
@@ -324,8 +440,9 @@ class ShardTaskExecutor:
                           # original already delivered, or the job is
                           # already failing — nothing to redo
                 elif attempts[sid] <= self.max_retries:
-                    self.stats["retries"] += 1
-                    submit(sid)
+                    schedule_retry(sid)
+                elif self.allow_partial:
+                    lost.add(sid)   # degrade instead of failing the job
                 else:
                     fatal = ShardTaskError(
                         f"shard {sid} failed after "
@@ -335,8 +452,13 @@ class ShardTaskExecutor:
         if fatal is not None:
             raise fatal
         missing = [s for s in ids if s not in results]
-        if missing:
+        if missing and not self.allow_partial:
+            if timed_out:
+                raise ShardTaskError(
+                    f"job deadline ({self.job_deadline_s}s) expired; "
+                    f"shards incomplete: {missing}")
             raise ShardTaskError(f"shards never completed: {missing}")
+        self.stats["lost_shards"] += len(missing)
         median_task = float(np.median(durations)) if durations else 0.0
         if durations:
             # feeds adaptive granularity scaling for the next job
@@ -346,6 +468,7 @@ class ShardTaskExecutor:
             "wall_s": time.perf_counter() - t_job,
             "tasks": float(len(ids)),
             "median_task_s": median_task,
+            "lost_shards": float(len(missing)),
         }
         return results
 

@@ -200,7 +200,8 @@ class PlacementMap:
     def split(self, shard_ids: Sequence[int],
               dead: frozenset = frozenset(), *,
               load=None,
-              hysteresis: Optional[float] = None) -> Dict[int, List[int]]:
+              hysteresis: Optional[float] = None,
+              orphans: Optional[List[int]] = None) -> Dict[int, List[int]]:
         """Partition shard ids into per-host groups by residency.
 
         Primary-only (``load=None``): each shard goes to its primary
@@ -213,11 +214,15 @@ class PlacementMap:
         ``runtime.balance.plan_split`` — a dead host is just an
         infinitely-hot one, so failover is the degenerate case of
         balancing).  Either way every shard lands on a host that holds
-        it; raises ``HostFailure`` for a shard with no live host.
-        Group lists preserve the input order (determinism for tests)."""
+        it.  A shard with *no* live host raises ``HostFailure`` — or,
+        when ``orphans`` (a mutable list) is supplied, is appended
+        there and left out of every group: the degraded-serving path,
+        where the query layer answers from the surviving sample with a
+        widened CI instead of failing.  Group lists preserve the input
+        order (determinism for tests)."""
         if load is not None:
             return plan_split(self, shard_ids, load, dead=dead,
-                              hysteresis=hysteresis).groups
+                              hysteresis=hysteresis, orphans=orphans).groups
         groups: Dict[int, List[int]] = {}
         for sid in shard_ids:
             sid = int(sid)
@@ -226,6 +231,9 @@ class PlacementMap:
                     groups.setdefault(h, []).append(sid)
                     break
             else:
+                if orphans is not None:
+                    orphans.append(sid)
+                    continue
                 raise HostFailure(int(self.primary[sid]), [sid])
         return groups
 
@@ -269,35 +277,110 @@ class HostGroupExecutor:
         host_fault_hook: Optional[Callable[[int, Sequence[int]], None]] = None,
         balanced: bool = False,
         balancer: Optional["HostLoadModel"] = None,
+        allow_partial: bool = False,
+        job_hook: Optional[Callable[[int], None]] = None,
         **executor_kw: Any,
     ):
         self.placement = placement
         self.host_fault_hook = host_fault_hook
+        # group-level degraded serving: a shard whose primary and every
+        # replica are dead (or down) is *lost* — recorded on stats /
+        # last_job — instead of raising HostFailure.  Deliberately NOT
+        # forwarded to the per-host executors: a task that exhausts its
+        # retries must still escalate to host failover (the replica may
+        # well succeed); only a shard with no live host left degrades.
+        self.allow_partial = bool(allow_partial)
+        # group-level job-start hook (job index): the chaos layer's
+        # clock — per-host executors count their own host-jobs, which
+        # is the wrong denomination for a scripted scenario
+        self.job_hook = job_hook
         if balanced and balancer is None:
             balancer = HostLoadModel(placement.n_hosts)
         self.balancer = balancer
+        self._workers_per_host = workers_per_host
+        self._executor_kw = dict(executor_kw)
         self.hosts: Dict[int, ShardTaskExecutor] = {
             h: ShardTaskExecutor(workers=workers_per_host, **executor_kw)
             for h in range(placement.n_hosts)
         }
+        # fleet membership: hosts taken out of rotation (crashed, or
+        # drained by runtime/fleet.FleetManager).  Unlike the per-job
+        # ``dead`` set this persists across jobs; the host's executor
+        # object stays alive so an in-flight job that captured an older
+        # placement generation can still finish on it (RCU — see
+        # set_placement), until close().
+        self.down: set = set()
         self.stats: Dict[str, Any] = {
             "jobs": 0, "host_jobs": 0, "host_failures": 0,
             "requeued_shards": 0, "shed_shards": 0,
+            "lost_shards": 0, "placement_epoch": 0,
             "scans_per_host": [0] * placement.n_hosts,
         }
         self.last_job: Optional[Dict[str, Any]] = None
         self._coord: Optional[ThreadPoolExecutor] = None
+        self._coord_size = 0
         self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    # fleet membership (driven by runtime/fleet.FleetManager)
+    # ------------------------------------------------------------------
+    def ensure_host(self, host: int) -> ShardTaskExecutor:
+        """Create (or revive) the executor slot for ``host`` and take
+        it out of the down set.  Stats arrays grow to cover the id.
+        Residency is NOT granted here — that happens when a new
+        placement generation is swapped in via ``set_placement`` (a
+        joiner must be warm before it serves)."""
+        h = int(host)
+        with self._lock:
+            if h not in self.hosts:
+                self.hosts[h] = ShardTaskExecutor(
+                    workers=self._workers_per_host, **self._executor_kw)
+            while len(self.stats["scans_per_host"]) <= h:
+                self.stats["scans_per_host"].append(0)
+            self.down.discard(h)
+        return self.hosts[h]
+
+    def retire_host(self, host: int) -> None:
+        """Take ``host`` out of rotation for every future split (crash
+        observed, or drain completed).  The executor object is kept —
+        in-flight jobs on an older placement generation may still be
+        running host groups on it; ``close()`` tears everything down."""
+        self.down.add(int(host))
+
+    def set_placement(self, placement: PlacementMap) -> None:
+        """RCU-style generation swap: every job captures the placement
+        reference at job start, so in-flight jobs finish on the old
+        generation while jobs submitted after this call see the new
+        one — membership changes never pause serving.  Executor slots
+        and stats arrays are grown to cover any new host ids, and the
+        balancer (if any) learns the new fleet width."""
+        for h in range(placement.n_hosts):
+            if h not in self.hosts:
+                self.ensure_host(h)
+        with self._lock:
+            while len(self.stats["scans_per_host"]) < placement.n_hosts:
+                self.stats["scans_per_host"].append(0)
+        if self.balancer is not None:
+            self.balancer.ensure_hosts(placement.n_hosts)
+        self.placement = placement
+        self.stats["placement_epoch"] += 1
 
     # ------------------------------------------------------------------
     # coordinator pool (one slot per host; warm across jobs)
     # ------------------------------------------------------------------
-    def _coordinator(self) -> ThreadPoolExecutor:
+    def _coordinator(self, width: Optional[int] = None) -> ThreadPoolExecutor:
+        need = max(1, int(width if width is not None
+                          else self.placement.n_hosts))
         with self._lock:
-            if self._coord is None:
+            if self._coord is None or self._coord_size < need:
+                # a grown fleet needs more concurrent host slots; the
+                # old pool drains its in-flight host jobs on its own
+                old = self._coord
                 self._coord = ThreadPoolExecutor(
-                    max_workers=max(1, self.placement.n_hosts),
-                    thread_name_prefix="host-coord")
+                    max_workers=need, thread_name_prefix="host-coord")
+                self._coord_size = need
+                if old is not None:
+                    old.shutdown(wait=False)
             return self._coord
 
     def close(self) -> None:
@@ -330,20 +413,24 @@ class HostGroupExecutor:
         res = self.hosts[host].map_shards(corpus, shard_ids, fn)
         return res, time.perf_counter() - t0
 
-    def _split(self, shard_ids: Sequence[int], dead: frozenset,
-               requeue: bool = False) -> Tuple[Dict[int, List[int]],
-                                               Optional[BalanceAudit]]:
+    def _split(self, placement: PlacementMap, shard_ids: Sequence[int],
+               dead: frozenset, requeue: bool = False,
+               orphans: Optional[List[int]] = None,
+               ) -> Tuple[Dict[int, List[int]], Optional[BalanceAudit]]:
         """The one split point for both the initial plan and the
         failure requeue: primary residency without a balancer,
         cost-aware shedding with one (a dead host is just an
         infinitely-hot host, so failover rides the same path).  A
         requeue round is read-only on the balancer: the dead host's
         small group must not flip the hysteresis state or inflate the
-        planned-shed stat."""
+        planned-shed stat.  ``placement`` is the generation the job
+        captured at start, not ``self.placement`` — membership swaps
+        must not move a job's shards mid-flight."""
         if self.balancer is None:
-            return self.placement.split(shard_ids, dead), None
-        audit = plan_split(self.placement, shard_ids, self.balancer,
-                           dead=dead, update_state=not requeue)
+            return placement.split(shard_ids, dead, orphans=orphans), None
+        audit = plan_split(placement, shard_ids, self.balancer,
+                           dead=dead, update_state=not requeue,
+                           orphans=orphans)
         if not requeue:
             self.stats["shed_shards"] += audit.shed
         return audit.groups, audit
@@ -359,11 +446,24 @@ class HostGroupExecutor:
 
         Hosts run concurrently; a failed host's group requeues onto
         replica hosts (at-least-once at host granularity) until every
-        shard has a result or some shard runs out of live hosts."""
+        shard has a result or some shard runs out of live hosts — at
+        which point the job raises ``HostFailure``, or with
+        ``allow_partial`` returns the shards it *did* gather and
+        records the rest on ``last_job["lost_shards"]``."""
         ids = [int(s) for s in shard_ids]
         t_job = time.perf_counter()
-        dead: set = set()
-        pending, audit = self._split(ids, frozenset())
+        # RCU: capture the placement generation for the whole job —
+        # a concurrent set_placement (join/drain) must not reshuffle
+        # this job's groups; new jobs pick up the new generation
+        placement = self.placement
+        if self.job_hook is not None:
+            self.job_hook(self.stats["jobs"])
+        # per-job dead set starts from the persistent membership down
+        # set: crashed/drained hosts never receive work again
+        dead: set = set(self.down)
+        orphans: Optional[List[int]] = [] if self.allow_partial else None
+        pending, audit = self._split(placement, ids, frozenset(dead),
+                                     orphans=orphans)
         results: Dict[int, Any] = {}
         per_host: Dict[int, Dict[str, float]] = {}
         realized: Dict[int, int] = {}
@@ -405,7 +505,8 @@ class HostGroupExecutor:
             # first runs on the calling thread — the caller would only
             # block on the gather anyway, and skipping its handoff
             # keeps the common small-batch job at one dispatch
-            coord = self._coordinator() if len(items) > 1 else None
+            coord = (self._coordinator(placement.n_hosts)
+                     if len(items) > 1 else None)
             futures = [
                 (h, g, coord.submit(self._run_host, h, corpus, g, fn))
                 for h, g in items[1:]
@@ -420,8 +521,10 @@ class HostGroupExecutor:
                            for sid in group]
                 self.stats["requeued_shards"] += len(requeue)
                 try:
-                    pending, _ = self._split(requeue, frozenset(dead),
-                                             requeue=True)
+                    pending, _ = self._split(placement, requeue,
+                                             frozenset(dead),
+                                             requeue=True,
+                                             orphans=orphans)
                 except HostFailure as hf:
                     # no live replica left: chain the underlying host
                     # exception (the orphaned shard's own host if we
@@ -432,6 +535,13 @@ class HostGroupExecutor:
                     raise hf from cause
             else:
                 pending = {}
+        # shards that never produced a result: orphans (no live host)
+        # plus anything a per-host executor configured with its own
+        # allow_partial/deadline gave up on
+        lost = [s for s in ids if s not in results]
+        if lost and not self.allow_partial:
+            raise HostFailure(int(placement.primary[lost[0]]), lost)
+        self.stats["lost_shards"] += len(lost)
         self.stats["jobs"] += 1
         medians = [j["median_task_s"] for j in per_host.values()
                    if j.get("median_task_s")]
@@ -445,15 +555,16 @@ class HostGroupExecutor:
             "median_task_s": float(np.median(medians)) if medians else 0.0,
             "hosts": float(len(per_host)),
             "per_host_wall_s": walls,
+            "lost_shards": float(len(lost)),
         }
         if audit is not None:
             # estimated (at split time) vs realized (measured) per-host
             # makespans, for the bench's run-over-run balance audit
             rec = audit.record()
             rec["realized_wall_s"] = [
-                walls.get(h, 0.0) for h in range(self.placement.n_hosts)]
+                walls.get(h, 0.0) for h in range(placement.n_hosts)]
             rec["realized_group_sizes"] = [
-                realized.get(h, 0) for h in range(self.placement.n_hosts)]
+                realized.get(h, 0) for h in range(placement.n_hosts)]
             rec["realized_makespan_s"] = max(walls.values(), default=0.0)
             self.last_job["balance"] = rec
         return results

@@ -102,7 +102,7 @@ class BatchWindow:
         self._closed = False
         self.stats: Dict[str, int] = {
             "batches": 0, "served": 0, "cancelled": 0, "shed": 0,
-            "escalated": 0, "degraded": 0,
+            "escalated": 0, "degraded": 0, "batch_retries": 0,
             "closed_by_size": 0, "closed_by_deadline": 0,
             "closed_by_flush": 0,
         }
@@ -226,6 +226,30 @@ class BatchWindow:
                     self._flush = False
             self._run_batch(batch, reason)
 
+    def _execute_once_retried(self, queries: List[Any],
+                              kwargs: Dict[str, Any]) -> List[Any]:
+        """One batch through the engine, with a single synchronous
+        in-place retry on *infrastructure* failure (``HostFailure`` /
+        ``ShardTaskError``): a host that died mid-batch is marked dead
+        by the first attempt's requeue path (or taken out of rotation
+        by ``FleetManager.crash``), so the immediate re-run lands on
+        the survivors.  In place because the claimed futures are
+        already RUNNING — ``set_running_or_notify_cancel`` returns
+        False for a re-enqueued future, so queueing them again would
+        silently drop them.  Exactly one retry: a second consecutive
+        infra failure means the fleet genuinely cannot serve the batch
+        and the waiters get the exception."""
+        from repro.runtime.executor import ShardTaskError
+        from repro.runtime.placement import HostFailure
+
+        try:
+            return self.engine.execute(queries, self.rate,
+                                       rng=self._rng, **kwargs)
+        except (HostFailure, ShardTaskError):
+            self.stats["batch_retries"] += 1
+            return self.engine.execute(queries, self.rate,
+                                       rng=self._rng, **kwargs)
+
     def _run_batch(self, batch: List[Tuple[Any, Future]],
                    reason: str) -> None:
         # Claim every future before executing: a caller may have
@@ -250,8 +274,7 @@ class BatchWindow:
                 kwargs["pressure"] = pressure
             t0 = time.perf_counter()
             try:
-                results = self.engine.execute(queries, self.rate,
-                                              rng=self._rng, **kwargs)
+                results = self._execute_once_retried(queries, kwargs)
             except BaseException as exc:  # deliver failures to every waiter
                 for _, fut in claimed:
                     fut.set_exception(exc)
