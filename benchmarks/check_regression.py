@@ -14,11 +14,17 @@ injected per-shard delay then lands back on the critical path),
 query's rate planned from its error budget, every count answered with
 a Hansen-Hurwitz interval — this row's throughput collapses if
 planning or interval construction grows a per-query serialization
-point), and ``batched_chaos`` (the 2-host topology under a steady
+point), ``batched_chaos`` (the 2-host topology under a steady
 scripted ``FaultPlan``: uniform per-shard slowdowns plus a mildly
 flaky host — sleep-dominated, hence machine-stable, and it collapses
 if the injection seams grow per-task overhead or retries stop
-clearing transient faults).  The
+clearing transient faults), and ``batched_cached`` (the semantic-
+cache path serving the Zipf-skewed stream: most queries resolve as
+exact LSH-signature hits that skip sampling, scanning, and the
+executor — this row's throughput collapses if hits stop bypassing
+execution or the probe itself grows a per-query serialization
+point; its baseline sits far below the measured hit-path qps
+because the floor only needs to catch that collapse).  The
 wide tolerance absorbs runner-to-runner CPU variance while still
 catching the real regressions this gate exists for: a serialization
 point sneaking back into the batched scoring path, postings caches
@@ -48,7 +54,7 @@ import sys
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
                                 "serve_smoke.json")
 DEFAULT_KEYS = ("batched_fused,batched_hosts2,batched_lb2,"
-                "batched_budget,batched_chaos")
+                "batched_budget,batched_chaos,batched_cached")
 
 
 def check_key(current: dict, baseline: dict, key: str,

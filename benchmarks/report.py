@@ -158,7 +158,7 @@ def serve_section(serve: Dict) -> str:
     record kind without a renderer still prints a one-line summary
     (nothing in the JSON is dropped on the floor)."""
     rendered = {"config", "load_sweep", "placement", "balance", "budget",
-                "chaos"}
+                "chaos", "cache"}
     lines = ["## §Serving", ""]
     cfg = serve.get("config", {})
     if cfg:
@@ -359,6 +359,44 @@ def serve_section(serve: Dict) -> str:
             f"live hosts {fleet.get('live_hosts')}",
             "- faults fired (scenario): "
             + ", ".join(f"{k}={v}" for k, v in fired.items()),
+            "",
+        ]
+
+    ca = serve.get("cache")
+    if ca:
+        z = ca.get("zipf") or {}
+        zstats = z.get("stats") or {}
+        sh = ca.get("single_host") or {}
+        fl = ca.get("fleet") or {}
+        cold = sh.get("cold_parity", {})
+        warm = sh.get("warm_parity", {})
+        lines += [
+            "### Semantic query cache (LSH-signature keyed)",
+            "",
+            f"Zipf stream (skew {z.get('skew', '?')}): "
+            f"{z.get('stream', '?')} queries over a "
+            f"{z.get('pool', '?')}-query pool — cached p50 "
+            f"**{z.get('cached_p50_ms', float('nan')):.3f} ms** vs "
+            f"uncached {z.get('uncached_p50_ms', float('nan')):.3f} ms "
+            f"(**{z.get('p50_collapse', float('nan')):.1f}x** collapse; "
+            f"gate: cached must be strictly below), "
+            f"{zstats.get('hits', '?')} hits / "
+            f"{zstats.get('near_hits', '?')} near / "
+            f"{zstats.get('misses', '?')} misses",
+            "",
+            "- exact-hit parity (radius 0): cold pass bit-for-bit the "
+            "uncached engine "
+            + ", ".join(f"{k}={v}" for k, v in cold.items())
+            + "; warm pass all "
+            f"{(sh.get('stats') or {}).get('hits', '?')} hits "
+            "bit-for-bit the cold results "
+            + ", ".join(f"{k}={v}" for k, v in warm.items()),
+            f"- generation fencing ({fl.get('hosts', '?')} hosts): "
+            f"join dropped "
+            f"{(fl.get('join') or {}).get('stale_dropped', '?')} stale "
+            f"entries, drain dropped "
+            f"{(fl.get('drain') or {}).get('stale_dropped', '?')} — "
+            f"zero cache hits crossed either swap (hard gate)",
             "",
         ]
 

@@ -106,6 +106,33 @@ same mixed workload (aggregation / Boolean / ranked, paper Table I):
                     the joiner was fully warmed before serving, and the
                     planned drain orphans nothing (``--chaos-only``
                     runs just this arm — the CI chaos-smoke job)
+  batched_zipf    - (``--zipf``; always on under ``--smoke``) the plain
+                    batched engine serving a Zipf-skewed stream (skew
+                    ``ZIPF_SKEW``, 2x the distinct pool): repeated hot
+                    queries pay full sampling + scan price every time.
+                    The uncached baseline the cached row is read
+                    against — same stream, so qps/p50 are over the
+                    stream length, not ``n_queries``
+  batched_cached  - the same Zipf stream through a
+                    ``SemanticQueryCache``-enabled engine (built via
+                    ``launch.serve_stack.build_serving_stack``, reused
+                    across trials): the warm pass populates the cache,
+                    measured trials serve mostly exact LSH-signature
+                    hits that skip sampling, scanning, and the
+                    executor entirely.  Floored by the regression
+                    gate, and *hard-gated* in-run: cached p50 must be
+                    strictly below ``batched_zipf`` p50.  Alongside
+                    the rows a ``cache`` record runs two untimed hard
+                    checks at Hamming radius 0 — (1) exact-hit
+                    parity: a cold cached pass is bit-for-bit the
+                    plain engine under the same seeds, and a warm
+                    pass under different seeds resolves every query
+                    from the cache with results bit-for-bit the cold
+                    ones; (2) generation fencing: across scripted
+                    ``FleetManager`` join and drain swaps ZERO cache
+                    hits cross the placement-epoch bump, every entry
+                    drops as ``stale_epoch``, and post-swap results
+                    match a plain engine on the new topology
 
 Each mode runs ``trials`` times and the best wall time is reported
 (the container CPU is shared; best-of filters scheduler noise).
@@ -169,6 +196,13 @@ HOT_HOST_DELAY_S = 1e-2
 # recovery hard-check run with a tight 1.25x bound
 CHAOS_SLOW_MS = 3.0
 
+# the Zipf/cached arms' traffic shape: skew 1.5 makes the top query
+# ~10x the 10th-ranked one (a realistic hot-query head), and the
+# stream runs 2x the distinct pool so the cached arm's measured trials
+# serve mostly repeats — the regime the semantic cache is built for
+ZIPF_SKEW = 1.5
+ZIPF_STREAM_FACTOR = 2
+
 
 def _hot_host_hook(host, shard_ids):
     """Degrade host 0 by HOT_HOST_DELAY_S per shard it is about to
@@ -197,6 +231,18 @@ def _mixed_queries(corpus, n, rng):
         else:
             qs.append(BatchQuery.ranked(w, k=10))
     return qs
+
+
+def _zipf_stream(queries, n_stream, skew, rng):
+    """Power-law query stream over the distinct pool: the i-th query
+    (rank i+1) is drawn with probability proportional to rank**-skew —
+    the hot/near-duplicate traffic shape real serving sees, and what
+    the semantic cache is for."""
+    ranks = np.arange(1, len(queries) + 1, dtype=np.float64)
+    p = ranks ** -float(skew)
+    p /= p.sum()
+    idx = rng.choice(len(queries), size=int(n_stream), p=p)
+    return [queries[int(i)] for i in idx]
 
 
 def _run_per_query(corpus, index, queries, rate, executor, seed):
@@ -846,6 +892,148 @@ def _chaos_report(corpus, index, queries, rate, executor, n_hosts,
     return record
 
 
+def _cache_report(corpus, index, queries, rate, executor, n_hosts,
+                  workers, batch_size) -> dict:
+    """Semantic-cache correctness record, hard-gated.
+
+    Two scenarios, both run at Hamming radius 0 so every reuse is an
+    *exact-signature* hit (the bit-for-bit contract; near-hit
+    statistics are property-tested in tests/test_qcache.py, not
+    benched):
+
+    1. **Exact-hit parity** (single-host, the shared ``executor``):
+       a cold pass through a cache-enabled engine must be bit-for-bit
+       the plain engine's results under the same rng seeds (the cache
+       may not perturb the miss path), and a warm pass under
+       *different* seeds must resolve every distinct query from the
+       cache with results bit-for-bit equal to the cold pass (hits
+       consume no rng and return the memoized estimates verbatim).
+
+    2. **Generation fencing** (``n_hosts`` group + ``FleetManager``):
+       populate the cache at one placement epoch, then ``join`` a
+       host (RCU generation swap) and re-serve — ZERO cache hits may
+       cross the swap, every entry must drop as ``stale_epoch``, and
+       the re-served results must match a plain engine on the same
+       post-join topology.  Repopulate, ``drain`` the host, and check
+       the same again.  A control re-serve *before* the join proves
+       the warm cache would have hit, so the zero is the fence and
+       not an accident.
+
+    Any violation raises — these are serving-correctness contracts,
+    not performance numbers.
+    """
+    from repro.core.queries import QueryBatch
+    from repro.runtime import FleetManager, HostGroupExecutor, PlacementMap
+    from repro.runtime.qcache import (QueryCacheConfig, SemanticQueryCache,
+                                      query_key)
+
+    # dedupe the pool: _mixed_queries can recycle words on tiny corpora
+    # and a duplicate would hit mid-cold-pass, skewing the counts below
+    seen, pool = set(), []
+    for q in queries:
+        k = query_key(q)
+        if k not in seen:
+            seen.add(k)
+            pool.append(q)
+
+    def cache_cfg():
+        return QueryCacheConfig(max_entries=4 * len(pool), ttl_s=3600.0,
+                                hamming_radius=0)
+
+    def serve(engine, seed_base):
+        out = []
+        for i in range(0, len(pool), batch_size):
+            out.extend(engine.execute(
+                pool[i:i + batch_size], rate,
+                rng=np.random.default_rng(seed_base + i)))
+        return out
+
+    # --- gate 1: exact-hit parity on the single-host executor --------
+    cache = SemanticQueryCache(cache_cfg())
+    cached_engine = QueryBatch(corpus, index, executor=executor,
+                               cache=cache)
+    plain = QueryBatch(corpus, index, executor=executor)
+    want = serve(plain, 500)
+    got_cold = serve(cached_engine, 500)      # same seeds -> same draws
+    cold_parity = _gather_parity(pool, got_cold, want)
+    if not all(cold_parity.values()):
+        raise RuntimeError(
+            f"cache MISS path diverged from the uncached engine under "
+            f"identical seeds: {cold_parity} — attaching a cold cache "
+            f"must be a no-op")
+    if cache.stats["hits"] or cache.stats["near_hits"]:
+        raise RuntimeError(
+            f"cold pass over {len(pool)} distinct queries reported "
+            f"{cache.stats['hits']} hits / {cache.stats['near_hits']} "
+            f"near-hits — the pool dedup or the keying is broken")
+    got_warm = serve(cached_engine, 900)      # different seeds on purpose
+    if cache.stats["hits"] != len(pool):
+        raise RuntimeError(
+            f"warm pass resolved {cache.stats['hits']}/{len(pool)} "
+            f"queries from the cache — exact re-asks must all hit")
+    warm_parity = _gather_parity(pool, got_warm, want)
+    if not all(warm_parity.values()):
+        raise RuntimeError(
+            f"exact-hit results differ from the uncached execution: "
+            f"{warm_parity} — hits must be bit-for-bit the memoized "
+            f"result, rng-independent")
+    single_host = dict(pool=len(pool), cold_parity=cold_parity,
+                       warm_parity=warm_parity, stats=cache.record())
+
+    # --- gate 2: zero hits across fleet generation swaps -------------
+    hg = HostGroupExecutor(
+        PlacementMap.blocked(corpus.n_shards, n_hosts, n_replicas=1),
+        workers_per_host=max(1, workers // n_hosts))
+    fleet = FleetManager(hg, warm_fn=lambda sid, src, dst: None)
+    fcache = SemanticQueryCache(cache_cfg())
+    feng = QueryBatch(corpus, index, executor=hg, cache=fcache)
+    fref = QueryBatch(corpus, index, executor=hg)
+
+    serve(feng, 100)                          # populate at epoch e0
+    serve(feng, 140)                          # control: warm cache hits
+    control_hits = fcache.stats["hits"]
+    if control_hits != len(pool):
+        raise RuntimeError(
+            f"pre-join control re-serve hit {control_hits}/{len(pool)} "
+            f"— the warm cache is not actually warm, the join gate "
+            f"below would pass vacuously")
+
+    def swap_and_check(event_name, swap):
+        ev = swap()
+        hits0 = fcache.stats["hits"]
+        stale0 = fcache.stats["stale_epoch"]
+        got = serve(feng, 180)                # every entry is now stale
+        want = serve(fref, 180)               # same seeds, same topology
+        stale_hits = fcache.stats["hits"] - hits0
+        staled = fcache.stats["stale_epoch"] - stale0
+        if stale_hits:
+            raise RuntimeError(
+                f"{stale_hits} cache hits served across the {event_name} "
+                f"generation swap — stale-epoch entries must never hit")
+        if staled < len(pool):
+            raise RuntimeError(
+                f"only {staled}/{len(pool)} entries dropped as "
+                f"stale_epoch across {event_name} — the epoch fence "
+                f"is not covering the cache")
+        parity = _gather_parity(pool, got, want)
+        if not all(parity.values()):
+            raise RuntimeError(
+                f"post-{event_name} re-serve diverged from the plain "
+                f"engine on the same topology: {parity}")
+        return dict(event=ev, stale_dropped=staled, parity=parity)
+
+    join_rec = swap_and_check("join", lambda: fleet.join(n_hosts))
+    # serve(feng, 180) above repopulated at the post-join epoch; the
+    # drain swap must fence those entries just the same
+    drain_rec = swap_and_check("drain", lambda: fleet.drain(n_hosts))
+    fleet_rec = dict(hosts=n_hosts, control_hits=control_hits,
+                     join=join_rec, drain=drain_rec,
+                     stats=fcache.record(), fleet=fleet.record())
+    hg.close()
+    return dict(hamming_radius=0, single_host=single_host,
+                fleet=fleet_rec)
+
+
 def run_sweep(corpus, index, queries, rate, executor, batch_size) -> list:
     """Static-vs-adaptive window sojourn across arrival rates.
 
@@ -935,8 +1123,9 @@ def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
         workers: int = 2, trials: int = 3, out_path: str = None,
         smoke: bool = False, sweep: bool = False, hosts: int = 0,
         replicas: int = 1, chaos: bool = False,
-        chaos_only: bool = False) -> dict:
+        chaos_only: bool = False, zipf: bool = False) -> dict:
     chaos = chaos or chaos_only
+    zipf = (zipf or smoke) and not chaos_only
     if smoke:
         # CI budget: tiny corpus, short PV training.  The arms
         # themselves cost milliseconds next to the setup, so 5 trials
@@ -996,6 +1185,30 @@ def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
         arms["batched_budget"] = lambda seed: _run_batched(
             corpus, index, budget_queries, rate, executor, seed, batch_size,
             engine=budget_engine)
+    arm_n = {}                      # per-arm served-query count override
+    zipf_stream = cache_stack = None
+    if zipf:
+        # the semantic-cache arms: the SAME Zipf-skewed stream (2x the
+        # distinct pool, hot head) through the plain batched engine
+        # (batched_zipf — repeats pay full price) and through a
+        # cache-enabled engine reused across trials (batched_cached —
+        # the warm pass populates, measured trials serve mostly exact
+        # hits that skip sampling, scanning, and the executor).  Both
+        # rows are qps/p50 over the stream length, not n_queries.
+        from repro.launch.serve_stack import build_serving_stack
+        from repro.runtime.qcache import QueryCacheConfig
+        zipf_stream = _zipf_stream(queries, ZIPF_STREAM_FACTOR * n_queries,
+                                   ZIPF_SKEW, np.random.default_rng(17))
+        arms["batched_zipf"] = lambda seed: _run_batched(
+            corpus, index, zipf_stream, rate, executor, seed, batch_size)
+        cache_stack = build_serving_stack(
+            corpus, index, cache=True, workers=workers,
+            cache_config=QueryCacheConfig(max_entries=4 * n_queries,
+                                          ttl_s=3600.0))
+        arms["batched_cached"] = lambda seed: _run_batched(
+            corpus, index, zipf_stream, rate, cache_stack.executor, seed,
+            batch_size, engine=cache_stack.engine)
+        arm_n["batched_zipf"] = arm_n["batched_cached"] = len(zipf_stream)
     chaos_exec = chaos_plan = None
     if chaos:
         # the chaos-hardened topology under a steady scripted fault
@@ -1057,17 +1270,18 @@ def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
                 [t if np.isscalar(t) else t[0] for t in best_lat], 50))
         else:
             p50 = float(np.percentile([t / n for t, n in best_lat], 50))
+        n_served = arm_n.get(name, n_queries)
         if name == "windowed":
             # open-loop burst: sojourn includes queue backlog behind the
             # single dispatcher, so label it as such instead of p50_ms
-            report[name] = dict(qps=n_queries / best,
+            report[name] = dict(qps=n_served / best,
                                 p50_sojourn_ms=p50 * 1e3, wall_s=best,
                                 note="saturated open-loop burst; sojourn "
                                      "includes dispatcher queue backlog")
         else:
-            report[name] = dict(qps=n_queries / best, p50_ms=p50 * 1e3,
+            report[name] = dict(qps=n_served / best, p50_ms=p50 * 1e3,
                                 wall_s=best)
-        csv_row(f"serve_{name}", 1e6 * best / n_queries,
+        csv_row(f"serve_{name}", 1e6 * best / n_served,
                 f"qps={report[name]['qps']:.1f}")
 
     if chaos:
@@ -1080,6 +1294,34 @@ def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
                 f"recovery {report['chaos']['recovery_ratio']:.2f}x, "
                 f"lost {report['chaos']['lost_queries']}, "
                 f"warmed {report['chaos']['warmed_shards']}")
+
+    if zipf:
+        report["cache"] = _cache_report(
+            corpus, index, queries, rate, executor, max(hosts, 2),
+            workers, batch_size)
+        cached_p50 = report["batched_cached"]["p50_ms"]
+        uncached_p50 = report["batched_zipf"]["p50_ms"]
+        report["cache"]["zipf"] = dict(
+            skew=ZIPF_SKEW, pool=n_queries, stream=len(zipf_stream),
+            uncached_p50_ms=uncached_p50, cached_p50_ms=cached_p50,
+            p50_collapse=uncached_p50 / max(cached_p50, 1e-9),
+            stats=cache_stack.cache.record())
+        cache_stack.close()
+        # the latency contract: under skewed traffic the cached arm's
+        # p50 must be STRICTLY below the uncached arm on the same
+        # stream — a cache that hits but does not win latency is
+        # overhead, and a regression here means hits stopped skipping
+        # the sampling/scan path
+        if cached_p50 >= uncached_p50:
+            raise RuntimeError(
+                f"cached p50 {cached_p50:.3f} ms >= uncached "
+                f"{uncached_p50:.3f} ms on the Zipf stream "
+                f"(skew {ZIPF_SKEW}) — exact hits are not bypassing "
+                f"execution")
+        csv_row("serve_cache", 0.0,
+                f"p50 collapse "
+                f"{report['cache']['zipf']['p50_collapse']:.1f}x, "
+                f"hits {report['cache']['zipf']['stats']['hits']}")
 
     if hosts >= 2 and not chaos_only:
         report["placement"] = _placement_report(
@@ -1132,6 +1374,7 @@ def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
                             n_docs=corpus.n_docs, smoke=smoke,
                             hosts=hosts, replicas=replicas,
                             chaos=chaos, chaos_only=chaos_only,
+                            zipf=zipf, zipf_skew=ZIPF_SKEW,
                             executor_stats=dict(executor.stats))
     executor.close()
 
@@ -1164,6 +1407,12 @@ if __name__ == "__main__":
                          "kill/join/drain scenario record (hard-gated) "
                          "plus the batched_chaos throughput row "
                          "(--smoke always includes it)")
+    ap.add_argument("--zipf", action="store_true",
+                    help="add the semantic-cache arms: batched_zipf / "
+                         "batched_cached rows on a Zipf-skewed stream "
+                         "plus the hard-gated cache correctness record "
+                         "(exact-hit parity, zero stale-generation "
+                         "hits; --smoke always includes them)")
     ap.add_argument("--chaos-only", action="store_true",
                     help="run ONLY the chaos arm (the CI chaos-smoke "
                          "job): scenario record + batched_chaos row, "
@@ -1172,4 +1421,4 @@ if __name__ == "__main__":
     args = ap.parse_args()
     run(smoke=args.smoke, sweep=args.sweep, hosts=args.hosts,
         replicas=args.replicas, chaos=args.chaos,
-        chaos_only=args.chaos_only, out_path=args.out)
+        chaos_only=args.chaos_only, zipf=args.zipf, out_path=args.out)

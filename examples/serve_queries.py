@@ -42,9 +42,20 @@ answers.  Shed submits honor the ``Backpressure.retry_after_s`` hint
 end-of-run budget line prints the planner's audit: planned vs realized
 rates, degradation pressure, CI coverage of the exact counts.
 
+``--cache`` attaches the semantic query cache (LSH-signature keyed,
+``runtime/qcache``) and serves the stream *twice*: the first pass
+populates (all misses, bit-for-bit the uncached results), the replay
+resolves as exact hits with zero scoring/sampling/scan — the p50
+collapse prints at the end alongside the hit/miss counters.
+
+The whole stack — executor topology, planner, cache, controller,
+window, fleet — is assembled through the one-call serving facade
+(``repro.launch.serve_stack.build_serving_stack``); the flags below
+are a thin argparse skin over its ``ServeConfig``.
+
     PYTHONPATH=src python examples/serve_queries.py [--queries 48]
         [--hosts 2] [--replicas 1] [--hot-host-ms 2] [--no-balance]
-        [--budget-err 0.5] [--budget-latency-ms 50]
+        [--budget-err 0.5] [--budget-latency-ms 50] [--cache]
 """
 import argparse
 import dataclasses
@@ -99,6 +110,10 @@ def main():
                     help="degradation floor rate — overload may "
                          "squeeze a budgeted query down to this rate, "
                          "never below")
+    ap.add_argument("--cache", action="store_true",
+                    help="attach the LSH-signature semantic query "
+                         "cache and replay the stream once to show "
+                         "the exact-hit p50 collapse")
     args = ap.parse_args()
     budget_on = (args.budget_err is not None
                  or args.budget_latency_ms is not None)
@@ -111,10 +126,8 @@ def main():
                                     precision_at_k, recall)
     from repro.data.corpus import SyntheticCorpusConfig, generate_text_corpus
     from repro.data.store import ShardedCorpus
-    from repro.runtime import (Backpressure, BatchWindow, ControllerConfig,
-                               HostGroupExecutor, PlacementMap, QueryBudget,
-                               RatePlanner, ShardTaskExecutor,
-                               WindowController)
+    from repro.launch.serve_stack import ServeConfig, build_serving_stack
+    from repro.runtime import Backpressure, ControllerConfig, QueryBudget
 
     print("== offline index build ==")
     ccfg = SyntheticCorpusConfig(n_docs=2400, vocab_size=4096, n_topics=16)
@@ -138,31 +151,42 @@ def main():
             faults["injected"] += 1
             raise RuntimeError("injected transient fault")
 
+    host_hook = None
+    if args.hosts >= 2 and args.hot_host_ms > 0:
+        def host_hook(host, shard_ids):
+            if host == 0:
+                time.sleep(args.hot_host_ms * 1e-3 * len(shard_ids))
+    balanced = (args.hosts >= 2 and not args.no_balance
+                and args.replicas >= 1)
+    max_pending = args.max_pending or 8 * args.batch
+    controller_cfg = None
+    if not args.static:
+        controller_cfg = ControllerConfig(
+            min_delay_s=1e-4, max_delay_s=args.window_ms / 1e3,
+            min_batch=1, max_batch=args.batch)
+    # one call wires executor topology, planner, cache, controller,
+    # and window — the facade replaces the old hand-assembly here
+    stack = build_serving_stack(corpus, index, ServeConfig(
+        rate=args.rate,
+        hosts=args.hosts if args.hosts >= 2 else 0,
+        replicas=args.replicas, balanced=balanced,
+        workers=args.workers, fault_hook=fault_hook,
+        host_fault_hook=host_hook, adaptive_workers=True,
+        planner=budget_on, ci=budget_on, cache=args.cache,
+        window=True, adaptive=not args.static,
+        max_batch=args.batch, max_delay_s=args.window_ms / 1e3,
+        max_pending=max_pending, controller_config=controller_cfg,
+        seed=1))
+    executor, engine = stack.executor, stack.engine
+    controller, window = stack.controller, stack.window
     if args.hosts >= 2:
-        placement = PlacementMap.blocked(corpus.n_shards, args.hosts,
-                                         n_replicas=args.replicas)
-        host_hook = None
-        if args.hot_host_ms > 0:
-            def host_hook(host, shard_ids):
-                if host == 0:
-                    time.sleep(args.hot_host_ms * 1e-3 * len(shard_ids))
-        balanced = not args.no_balance and args.replicas >= 1
-        executor = HostGroupExecutor(
-            placement,
-            workers_per_host=max(1, args.workers // args.hosts),
-            max_retries=2, fault_hook=fault_hook, adaptive_workers=True,
-            balanced=balanced, host_fault_hook=host_hook)
+        placement = executor.placement
         print(f"   placement: {args.hosts} hosts (blocked, "
               f"{placement.n_replicas} replica); shard residency "
               f"{[len(placement.shards_on(h)) for h in range(args.hosts)]}; "
               f"balancer {'on' if balanced else 'off'}"
               + (f"; host 0 degraded {args.hot_host_ms:.1f} ms/shard"
                  if host_hook else ""))
-    else:
-        executor = ShardTaskExecutor(workers=args.workers, max_retries=2,
-                                     fault_hook=fault_hook,
-                                     adaptive_workers=True)
-    engine = QueryBatch(corpus, index, executor=executor)
 
     rng = np.random.default_rng(0)
     counts = np.bincount(np.concatenate([s.tokens for s in corpus.shards]),
@@ -186,13 +210,11 @@ def main():
     # serving engine carries the planner, and the reference must stay
     # exact regardless of what the planner would do to budgeted queries
     print("== precise reference pass (rate 1.0, one shared scan) ==")
-    precise = engine.execute(queries, 1.0)
+    # always a plain engine: the reference must stay exact (and out of
+    # the cache) regardless of planner/cache on the serving engine
+    ref_engine = QueryBatch(corpus, index, executor=executor)
+    precise = ref_engine.execute(queries, 1.0)
 
-    controller = None
-    if not args.static:
-        controller = WindowController(ControllerConfig(
-            min_delay_s=1e-4, max_delay_s=args.window_ms / 1e3,
-            min_batch=1, max_batch=args.batch))
     if budget_on:
         budget = QueryBudget(
             max_rel_error=args.budget_err,
@@ -200,27 +222,21 @@ def main():
                            if args.budget_latency_ms is not None else None),
             floor_rate=args.budget_floor)
         queries = [dataclasses.replace(q, budget=budget) for q in queries]
-        planner = RatePlanner(corpus.n_shards, controller=controller)
-        engine = QueryBatch(corpus, index, executor=executor,
-                            planner=planner, ci=True)
         print(f"   budgets: rel err <= {args.budget_err}"
               + (f", p99 <= {args.budget_latency_ms:.0f} ms"
                  if args.budget_latency_ms is not None else "")
               + f", floor rate {args.budget_floor}; planner attached, "
               f"results carry confidence intervals")
-    max_pending = args.max_pending or 8 * args.batch
     mode = ("static window" if args.static
             else "adaptive window (p99-sojourn controller)")
     print(f"== serving {args.queries} mixed queries at rate {args.rate} "
           f"through a {args.window_ms:.1f} ms / {args.batch}-query "
           f"{mode}, pending bound {max_pending} ==")
-    # the window's rng is drawn from by the dispatcher thread while the
-    # main thread draws arrival gaps — separate generators keep both
-    # streams deterministic (numpy Generators are not thread-safe)
-    window = BatchWindow(engine, args.rate, max_batch=args.batch,
-                         max_delay_s=args.window_ms / 1e3,
-                         controller=controller, max_pending=max_pending,
-                         rng=np.random.default_rng(1))
+    # with --cache the stream is served twice: pass 1 populates the
+    # cache (all misses), pass 2 replays the same queries as exact hits
+    stream = list(range(len(queries)))
+    if args.cache:
+        stream = stream + stream
     arrival_rng = np.random.default_rng(2)
     done_at = {}
     t_submit = {}
@@ -232,7 +248,8 @@ def main():
 
     t_serve = time.perf_counter()
     futs, shed, retry_hints = [], 0, []
-    for i, q in enumerate(queries):
+    for i, qi in enumerate(stream):
+        q = queries[qi]
         t_submit[i] = time.perf_counter()
         while True:
             try:
@@ -260,6 +277,8 @@ def main():
     acc = {"agg": [], "bool": [], "ranked": []}
     kind_of = {"count": "agg", "bool": "bool", "ranked": "ranked"}
     for i, (q, r, ref) in enumerate(zip(queries, results, precise)):
+        # pass-1 results only: the replay (if any) repeats the same
+        # queries and lands in the cache line below
         k = kind_of[q.kind]
         lat[k].append(done_at[i] - t_submit[i])
         if q.kind == "count":
@@ -273,11 +292,21 @@ def main():
 
     ws = window.stats
     sojourn = np.asarray([done_at[i] - t_submit[i]
-                          for i in range(len(queries))])
-    print(f"   throughput: {len(queries)/elapsed:8.1f} queries/sec "
-          f"({len(queries)} queries in {elapsed:.2f}s)")
+                          for i in range(len(stream))])
+    print(f"   throughput: {len(stream)/elapsed:8.1f} queries/sec "
+          f"({len(stream)} queries in {elapsed:.2f}s)")
     print(f"   sojourn: p50 {np.percentile(sojourn, 50)*1e3:.2f} ms | "
           f"p99 {np.percentile(sojourn, 99)*1e3:.2f} ms")
+    if args.cache:
+        n = len(queries)
+        p50_cold = np.percentile(sojourn[:n], 50) * 1e3
+        p50_hot = np.percentile(sojourn[n:], 50) * 1e3
+        rec = stack.cache.record()
+        print(f"   cache: replay p50 {p50_hot:.2f} ms vs cold "
+              f"{p50_cold:.2f} ms ({p50_cold / max(p50_hot, 1e-9):.1f}x); "
+              f"{rec['hits']} hits / {rec['near_hits']} near / "
+              f"{rec['misses']} misses / {rec['bypassed']} bypassed "
+              f"({rec['size']} entries)")
     print(f"   windows: {ws['batches']} "
           f"(by size {ws['closed_by_size']}, "
           f"by deadline {ws['closed_by_deadline']}, "
@@ -345,7 +374,7 @@ def main():
             print(f"   {kind:7s}: p50 sojourn latency "
                   f"{np.percentile(lat[kind], 50)*1e3:7.2f} ms | "
                   f"{metric} {np.mean(acc[kind]):.3f}")
-    executor.close()
+    stack.close()
 
 
 if __name__ == "__main__":

@@ -217,6 +217,14 @@ class ApproxIndex:
         """[B, dim] stack of query vectors (sum of word vectors each)."""
         return np.stack([self.query_vector(q) for q in queries])
 
+    def query_signatures(self, vecs: np.ndarray) -> np.ndarray:
+        """[B, bits//32] packed LSH signatures for query vectors under
+        the index's own hyperplanes, on the pure-numpy path (no device
+        dispatch) — the key material for the semantic query cache
+        (``runtime/qcache``).  Bit-identical to the jax signing the
+        index itself was built with."""
+        return lsh_mod.sign_vectors_np(vecs, self.planes)
+
     def shard_similarities_batch(
             self, queries: Sequence[Sequence[int]], *,
             fused: bool = True) -> np.ndarray:

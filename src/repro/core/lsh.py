@@ -21,6 +21,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +111,43 @@ def asymmetric_cosine(
     signs = 2.0 * db_bits - 1.0
     scale = 1.0 / (bits * jnp.sqrt(2.0 / jnp.pi))
     return jnp.clip(signs @ proj * scale, -1.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# pure-numpy signing / distance for the serving hot path
+#
+# The semantic query cache (runtime/qcache) signs every incoming query
+# vector per batch to form its key.  Operands are tiny ([B, dim] with B
+# in the tens), where jax dispatch overhead dominates the actual math —
+# so the cache keys on a numpy replica of the jax signing convention:
+# bit j of word k is signature bit 32*k + j, identical to
+# ``pack_bits(signature_bits(x, planes))`` (numpy's little-endian
+# ``packbits`` + a uint32 view reproduces the in-lane layout on the
+# little-endian machines everything here runs on).
+# ---------------------------------------------------------------------------
+
+_POPCOUNT8 = np.array([bin(i).count("1") for i in range(256)], np.uint8)
+
+
+def sign_vectors_np(vecs: np.ndarray, planes) -> np.ndarray:
+    """[B, dim] float -> [B, bits//32] uint32 packed signatures, pure
+    numpy, bit-identical to ``pack_bits(signature_bits(vecs, planes))``."""
+    vecs = np.atleast_2d(np.asarray(vecs, np.float32))
+    planes_np = np.asarray(planes, np.float32)
+    bits = (np.asarray(vecs @ planes_np.T) >= 0)
+    packed = np.packbits(bits, axis=1, bitorder="little")
+    return np.ascontiguousarray(packed).view(np.uint32)
+
+
+def packed_hamming_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """[N, W] x [M, W] packed uint32 -> [N, M] int32 Hamming distances
+    (XOR + uint8-LUT popcount), pure numpy."""
+    a2 = np.atleast_2d(np.asarray(a, np.uint32))
+    b2 = np.atleast_2d(np.asarray(b, np.uint32))
+    x = np.bitwise_xor(a2[:, None, :], b2[None, :, :])
+    per_byte = _POPCOUNT8[np.ascontiguousarray(x).view(np.uint8)]
+    return per_byte.reshape(a2.shape[0], b2.shape[0], -1).sum(
+        axis=-1, dtype=np.int32)
 
 
 class LSHIndex(NamedTuple):

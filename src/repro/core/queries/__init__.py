@@ -7,4 +7,6 @@ from repro.core.queries.retrieval import (  # noqa: F401
     precision_at_k, recall,
 )
 from repro.core.queries.recommend import recommend_query, RecommendResult  # noqa: F401
-from repro.core.queries.batch import BatchQuery, QueryBatch  # noqa: F401
+from repro.core.queries.batch import (  # noqa: F401
+    BatchQuery, ExecutionReport, QueryBatch,
+)

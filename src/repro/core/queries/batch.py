@@ -23,10 +23,11 @@ workload should amortize:
      ``runtime.placement.HostGroupExecutor`` as ``executor`` and each
      host shared-scans only its resident slice of the union, with the
      cross-host gather feeding the per-query reduces unchanged (the
-     executed plan is kept on ``last_plan`` so callers can audit the
-     residency split, and a balanced host group's split decision —
+     executed plan is kept on ``last_report.plan`` so callers can audit
+     the residency split, and a balanced host group's split decision —
      estimated vs realized per-host makespan, shed count — lands on
-     ``last_audit``).
+     ``last_report.balance``; the pre-report ``last_plan`` /
+     ``last_audit`` names survive as deprecated read-only properties).
   3. **Scan work** — per-shard operators walk the lazily-built CSR
      postings (``data/store.shard_postings``), so the second query to
      touch a shard pays O(matching tokens), not O(shard tokens).
@@ -37,7 +38,18 @@ consume exactly the per-shard values the single-query path would have
 produced — batching is purely an execution-layer rewrite, which is what
 the parity tests in tests/test_batch_engine.py pin down.
 
-Two serving-side extensions ride on the same machinery:
+Three serving-side extensions ride on the same machinery:
+
+  * **Semantic query caching** — construct with a
+    ``runtime.qcache.SemanticQueryCache`` and queries resolve against
+    the index's own LSH signatures before planning: exact-signature
+    hits return memoized results with zero scoring/draws/scans,
+    near-hits within a Hamming radius reuse the cached sampling plan
+    (unbiased for any sampling distribution — Hansen-Hurwitz) while
+    re-running the scan + reduce, and misses stay bit-for-bit the
+    uncached path.  Placement-epoch fencing keeps cached plans from
+    crossing fleet generations; degraded and budgeted answers are
+    never cached.
 
   * **Per-query error/latency budgets** — construct with a
     ``runtime.budget.RatePlanner`` and queries may carry a
@@ -92,6 +104,46 @@ from repro.data.store import (
     count_phrase_in_shard,
     shard_postings,
 )
+from repro.runtime.qcache import query_cache_vectors, query_key, sampler_class
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionReport:
+    """Typed, JSON-clean record of one ``QueryBatch.execute`` call.
+
+    Replaces the old mutable ``last_plan`` / ``last_audit`` /
+    ``last_budget`` / ``last_degraded`` attribute grab-bag with one
+    report per batch on ``QueryBatch.last_report`` (the old names
+    survive as deprecated read-only properties reading through it).
+
+    ``plan`` is the *executed* plan — one array of scanned shard ids
+    per query.  A semantic-cache exact hit executed nothing, so its
+    slot is an empty array; ``cache`` carries the batch's cache outcome
+    counts (hits / near_hits / misses / bypassed) when the engine has a
+    ``SemanticQueryCache`` attached, None otherwise.
+    """
+    n_queries: int
+    rate: float                          # nominal rate passed to execute
+    elapsed_s: float
+    rates: Tuple[float, ...]             # per-query effective rates
+    plan: Tuple[np.ndarray, ...]         # executed shard ids per query
+    balance: Optional[Dict[str, Any]] = None
+    budget: Optional[Dict[str, Any]] = None
+    degraded: Optional[Dict[str, Any]] = None
+    cache: Optional[Dict[str, int]] = None
+
+    def record(self) -> Dict[str, Any]:
+        """JSON-serializable view (numpy arrays become int lists)."""
+        return dict(
+            n_queries=int(self.n_queries),
+            rate=float(self.rate),
+            elapsed_s=float(self.elapsed_s),
+            rates=[float(r) for r in self.rates],
+            plan=[[int(s) for s in p] for p in self.plan],
+            balance=self.balance,
+            budget=self.budget,
+            degraded=self.degraded,
+            cache=self.cache)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,11 +209,15 @@ class QueryBatch:
         confidence: float = 0.95,
         planner=None,
         ci: bool = False,
+        cache=None,
     ):
         if method not in ("emapprox", "srcs"):
             raise ValueError(f"unknown method {method!r}")
         if method == "emapprox" and index is None:
             raise ValueError("emapprox method requires an index")
+        if cache is not None and index is None:
+            raise ValueError("semantic query cache requires an index "
+                             "(its keys are the index's LSH signatures)")
         self.corpus = corpus
         self.index = index
         self.executor = executor
@@ -177,23 +233,14 @@ class QueryBatch:
         # off by default because the bootstrap, while cheap, is not
         # free on the microsecond-scale serving hot path
         self.ci = bool(ci)
-        # the shard plan of the most recent execute() call (one array of
-        # sampled shard ids per query) — placement-aware callers compare
-        # its union's residency split against per-host scan telemetry
-        self.last_plan: Optional[List[np.ndarray]] = None
-        # the balance record of the most recent execute() call, when the
-        # executor is a balanced HostGroupExecutor (estimated vs
-        # realized per-host makespan, shed count) — None otherwise
-        self.last_audit: Optional[Dict[str, Any]] = None
-        # the budget record of the most recent execute() call, when a
-        # planner is set (planned vs realized per-query rates/errors,
-        # degradation pressure) — None otherwise
-        self.last_budget: Optional[Dict[str, Any]] = None
-        # the degradation record of the most recent execute() call,
-        # when the executor returned a partial gather (shards lost to
-        # dead hosts with no live replica): total lost shards and the
-        # per-query breakdown — None on the healthy path
-        self.last_degraded: Optional[Dict[str, Any]] = None
+        # ``cache`` (a runtime.qcache.SemanticQueryCache) memoizes
+        # per-query plans and results under the index's LSH signatures:
+        # exact hits skip scoring, sampling, and the scan entirely;
+        # near hits reuse the sampled shard plan and re-run the cheap
+        # reduce.  Misses stay bit-for-bit the uncached path.
+        self.cache = cache
+        # the typed record of the most recent execute() call
+        self.last_report: Optional[ExecutionReport] = None
 
     @property
     def accepts_pressure(self) -> bool:
@@ -202,6 +249,38 @@ class QueryBatch:
         checks this before forwarding the controller's degradation
         pressure (and before preferring degradation over shedding)."""
         return self.planner is not None
+
+    # ------------------------------------------------------------------
+    # deprecated read-only views of last_report (pre-report callers)
+    # ------------------------------------------------------------------
+    @property
+    def last_plan(self) -> Optional[List[np.ndarray]]:
+        """Deprecated: read ``last_report.plan`` — the executed shard
+        plan (one array of scanned shard ids per query)."""
+        r = self.last_report
+        return list(r.plan) if r is not None else None
+
+    @property
+    def last_audit(self) -> Optional[Dict[str, Any]]:
+        """Deprecated: read ``last_report.balance`` — the balanced
+        host group's split audit, None otherwise."""
+        r = self.last_report
+        return r.balance if r is not None else None
+
+    @property
+    def last_budget(self) -> Optional[Dict[str, Any]]:
+        """Deprecated: read ``last_report.budget`` — the planner's
+        budget audit record, None without a planner."""
+        r = self.last_report
+        return r.budget if r is not None else None
+
+    @property
+    def last_degraded(self) -> Optional[Dict[str, Any]]:
+        """Deprecated: read ``last_report.degraded`` — the partial
+        gather record (lost shards, per-query breakdown), None on the
+        healthy path."""
+        r = self.last_report
+        return r.degraded if r is not None else None
 
     # ------------------------------------------------------------------
     # planning: one batched scoring pass -> per-query probability rows
@@ -287,36 +366,89 @@ class QueryBatch:
         >= 1.0 take the precise path individually, so an unbudgeted
         batch at nominal rate 1.0 stays bit-for-bit the precise
         fast path.
+
+        With a semantic cache attached, queries resolve against it
+        before planning: exact-signature hits return their memoized
+        result (no scoring, no draws, no scan — and no rng
+        consumption, so the remaining misses draw exactly what they
+        would draw in a batch of their own), near-hits borrow the
+        cached sampling plan and re-run only the scan + reduce, and
+        misses execute bit-for-bit the uncached path.  Budgeted
+        queries and pressure-degraded batches bypass the cache in both
+        directions: a planned-rate or partial answer is a
+        point-in-time decision, never replayable as full fidelity.
         """
         rng = rng or np.random.default_rng(0)
         t0 = time.perf_counter()
         n_shards = self.corpus.n_shards
+        n = len(queries)
 
         if self.planner is not None:
             rates, audit = self.planner.plan_batch(queries, rate, pressure)
         else:
-            rates, audit = [float(rate)] * len(queries), None
+            rates, audit = [float(rate)] * n, None
+
+        # ---- semantic cache probe (before planning) ----
+        hits: Dict[int, Any] = {}
+        near: Dict[int, Any] = {}
+        cache_meta: Optional[Dict[str, int]] = None
+        sigs = qkeys = None
+        epoch = 0
+        if self.cache is not None and n:
+            sigs = self.index.query_signatures(
+                query_cache_vectors(self.index, queries))
+            qkeys = [query_key(q) for q in queries]
+            epoch = self._cache_epoch()
+            bypassed = 0
+            for i, q in enumerate(queries):
+                if pressure > 0.0 or q.budget is not None:
+                    bypassed += 1
+                    self.cache.stats["bypassed"] += 1
+                    continue
+                outcome, entry = self.cache.lookup(
+                    sigs[i], qkeys[i], sampler_class(q.kind),
+                    rates[i], epoch)
+                if outcome == "hit":
+                    hits[i] = entry
+                elif outcome == "near":
+                    near[i] = entry
+            cache_meta = dict(
+                hits=len(hits), near_hits=len(near),
+                misses=n - len(hits) - len(near) - bypassed,
+                bypassed=bypassed)
 
         all_ids = np.arange(n_shards, dtype=np.int64)
         uniform = np.full(n_shards, 1.0 / n_shards, np.float64)
         census = SampleResult(all_ids, uniform, 1.0)
-        if all(r >= 1.0 for r in rates):
-            samples = [census] * len(queries)
-            plan = [all_ids] * len(queries)
-        else:
-            rows = self._probability_rows(queries)
+        samples: List[Optional[SampleResult]] = [None] * n
+        plan: List[Optional[np.ndarray]] = [None] * n
+        for i, e in list(hits.items()) + list(near.items()):
+            samples[i], plan[i] = e.sample, e.plan
+        need = [i for i in range(n) if samples[i] is None]
+        rows_by_pos: Dict[int, np.ndarray] = {}
+        if need and all(rates[i] >= 1.0 for i in need):
+            for i in need:
+                samples[i], plan[i] = census, all_ids
+        elif need:
+            rows = self._probability_rows([queries[i] for i in need])
             # aggregation keeps the with-replacement multiset (the
             # Hansen-Hurwitz estimator needs it); retrieval unions docs
             # over the sample, so it draws distinct shards — same
             # samplers, in the same query order, as the single-query
             # entry points (pinned by the parity tests).  Per-query
             # precise rates draw nothing, exactly as the single-query
-            # precise path draws nothing.
-            samples = [census if r >= 1.0
-                       else (pps_sample(row, r, rng) if q.kind == "count"
-                             else pps_sample_distinct(row, r, rng))
-                       for q, row, r in zip(queries, rows, rates)]
-            plan = [unique_shards(s) for s in samples]
+            # precise path draws nothing; cache-resolved queries draw
+            # nothing either, so the misses' draw sequence matches a
+            # batch of only the misses.
+            for i, row in zip(need, rows):
+                r, q = rates[i], queries[i]
+                if r >= 1.0:
+                    samples[i], plan[i] = census, all_ids
+                    continue
+                rows_by_pos[i] = row
+                samples[i] = (pps_sample(row, r, rng) if q.kind == "count"
+                              else pps_sample_distinct(row, r, rng))
+                plan[i] = unique_shards(samples[i])
 
         if self.index is not None:
             doc_freq = self.index.doc_freq
@@ -326,18 +458,24 @@ class QueryBatch:
             n_docs = self.corpus.n_docs
             avg_len = self.corpus.n_tokens / max(n_docs, 1)
         fns = [self._shard_fn(q, doc_freq, n_docs, avg_len) for q in queries]
-        self.last_plan = list(plan)
 
-        if self.executor is not None:
-            per_query = self.executor.map_shard_batch(self.corpus, plan, fns)
+        # exact hits scan nothing: their slot in the executed plan is
+        # empty, and an all-hit batch skips executor dispatch entirely
+        empty = np.zeros(0, np.int64)
+        scan_plan = [empty if i in hits else plan[i] for i in range(n)]
+        if n and len(hits) == n:
+            per_query: List[Dict[int, Any]] = [{} for _ in range(n)]
+            job, balance = None, None
+        elif self.executor is not None:
+            per_query = self.executor.map_shard_batch(
+                self.corpus, scan_plan, fns)
             job = getattr(self.executor, "last_job", None)
-            self.last_audit = (dict(job["balance"])
-                               if isinstance(job, dict) and "balance" in job
-                               else None)
+            balance = (dict(job["balance"])
+                       if isinstance(job, dict) and "balance" in job
+                       else None)
         else:
-            per_query = self._inline_shared_scan(plan, fns)
-            self.last_audit = None
-            job = None
+            per_query = self._inline_shared_scan(scan_plan, fns)
+            job, balance = None, None
 
         # partial gather (allow_partial executors only): shards whose
         # hosts all died never produced results — each affected query
@@ -345,38 +483,67 @@ class QueryBatch:
         # of the whole batch aborting
         lost_total = (int(job.get("lost_shards", 0))
                       if isinstance(job, dict) else 0)
-        lost_per_query = [0] * len(queries)
+        lost_per_query = [0] * n
+        degraded = None
         if lost_total:
             lost_per_query = [
-                sum(1 for s in plan[i] if int(s) not in per_query[i])
-                for i in range(len(queries))]
-            self.last_degraded = dict(
+                sum(1 for s in scan_plan[i] if int(s) not in per_query[i])
+                for i in range(n)]
+            degraded = dict(
                 lost_shards=lost_total,
-                degraded_queries=sum(1 for n in lost_per_query if n),
+                degraded_queries=sum(1 for k in lost_per_query if k),
                 lost_per_query=lost_per_query)
-        else:
-            self.last_degraded = None
 
         elapsed = time.perf_counter() - t0
-        results = [self._reduce(q, samples[i], plan[i], per_query[i],
-                                elapsed, rates[i] >= 1.0,
-                                lost=lost_per_query[i])
-                   for i, q in enumerate(queries)]
-        self._feedback(queries, rates, results, audit, job)
+        results = [
+            hits[i].result._replace(elapsed_s=elapsed) if i in hits
+            else self._reduce(queries[i], samples[i], plan[i], per_query[i],
+                              elapsed, rates[i] >= 1.0,
+                              lost=lost_per_query[i])
+            for i in range(n)]
+
+        # populate: misses and near-hits insert their own full-fidelity
+        # entries; degraded answers (lost draws) never enter the cache
+        if self.cache is not None and n:
+            for i, q in enumerate(queries):
+                if (i in hits or pressure > 0.0 or q.budget is not None
+                        or lost_per_query[i]):
+                    continue
+                self.cache.insert(
+                    sigs[i], qkeys[i], sampler_class(q.kind), rates[i],
+                    probs=rows_by_pos.get(i), sample=samples[i],
+                    plan=plan[i], result=results[i], epoch=epoch)
+
+        budget = self._feedback(queries, rates, results, audit, job,
+                                degraded)
+        self.last_report = ExecutionReport(
+            n_queries=n, rate=float(rate), elapsed_s=elapsed,
+            rates=tuple(float(r) for r in rates), plan=tuple(scan_plan),
+            balance=balance, budget=budget, degraded=degraded,
+            cache=cache_meta)
         return results
+
+    def _cache_epoch(self) -> int:
+        """The executor's placement generation — every RCU placement
+        swap (fleet join/drain/crash, future ingest) bumps it, fencing
+        cached plans from serving across generations.  Executors
+        without placement (single host, inline) are generation 0."""
+        stats = getattr(self.executor, "stats", None)
+        if isinstance(stats, dict):
+            return int(stats.get("placement_epoch", 0))
+        return 0
 
     def _feedback(self, queries: Sequence[BatchQuery],
                   rates: Sequence[float], results: Sequence[Any],
-                  audit, job) -> None:
+                  audit, job, degraded) -> Optional[Dict[str, Any]]:
         """Close the planning loop: fold every realized (sample size,
         relative error) back into the planner's per-kind error curves,
         complete the batch's ``BudgetAudit`` with realized errors, and
-        attach its record to ``last_budget`` and the executor's
-        ``last_job["budget"]`` (the budget analogue of the balance
-        audit)."""
+        attach its record to the executor's ``last_job["budget"]`` (the
+        budget analogue of the balance audit).  Returns the budget
+        record for the batch's ``ExecutionReport``."""
         if self.planner is None or audit is None:
-            self.last_budget = None
-            return
+            return None
         realized: List[Optional[float]] = []
         for q, r, res in zip(queries, rates, results):
             est = getattr(res, "estimate", None)
@@ -392,12 +559,13 @@ class QueryBatch:
                     else self.confidence)
             self.planner.observe_result(q.kind, r, est.n, rel, conf)
         audit.realized_rel_error = realized
-        if self.last_degraded is not None:
-            audit.partial_queries = self.last_degraded["degraded_queries"]
-            audit.lost_shards = self.last_degraded["lost_shards"]
-        self.last_budget = audit.record()
+        if degraded is not None:
+            audit.partial_queries = degraded["degraded_queries"]
+            audit.lost_shards = degraded["lost_shards"]
+        budget = audit.record()
         if isinstance(job, dict):
-            job["budget"] = self.last_budget
+            job["budget"] = budget
+        return budget
 
     def _inline_shared_scan(
         self,

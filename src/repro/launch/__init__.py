@@ -1,1 +1,11 @@
-"""Launchers: production mesh, multi-pod dry-run, training, serving."""
+"""Launchers: production mesh, multi-pod dry-run, training, serving.
+
+``serve_stack`` is the serving facade: ``ServeConfig`` names every
+serving knob once and ``build_serving_stack`` wires executor ->
+cache -> planner -> engine -> controller -> window -> fleet in one
+call."""
+from repro.launch.serve_stack import (  # noqa: F401
+    ServeConfig,
+    ServingStack,
+    build_serving_stack,
+)

@@ -1,0 +1,224 @@
+"""One-call construction of the serving stack (``build_serving_stack``).
+
+Every serving consumer — ``examples/serve_queries.py``,
+``benchmarks/serve_bench.py``, the tests — used to hand-assemble the
+same tower three different ways: placement + executor, budget planner,
+window controller, batching window, semantic cache, fleet manager,
+each with its own kwarg spelling.  ``ServeConfig`` names every knob
+once and ``build_serving_stack`` wires the layers in the one correct
+order:
+
+    corpus + index
+        -> executor        (single-host pool, or PlacementMap +
+                            HostGroupExecutor when ``hosts >= 2``,
+                            balanced / replicated / partial-tolerant)
+        -> cache           (SemanticQueryCache, optional)
+        -> planner         (RatePlanner against the controller's cost
+                            model, optional)
+        -> engine          (QueryBatch carrying all of the above)
+        -> controller      (WindowController, optional)
+        -> window          (BatchWindow frontend, optional)
+        -> fleet           (FleetManager over the host group, optional)
+
+The returned ``ServingStack`` exposes each layer by name, closes
+bottom-up, and works as a context manager.  The facade is additive:
+``QueryBatch(...)`` and friends keep their constructors — this is the
+single *convenient* construction path, not the only one.
+
+    from repro.launch.serve_stack import ServeConfig, build_serving_stack
+
+    with build_serving_stack(corpus, index, hosts=2, cache=True,
+                             planner=True) as stack:
+        fut = stack.window.submit(query)          # streaming front
+        results = stack.engine.execute(qs, 0.25)  # or batch-at-a-time
+        print(stack.cache.record())
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core.queries.batch import QueryBatch
+from repro.runtime.budget import PlannerConfig, RatePlanner
+from repro.runtime.controller import ControllerConfig, WindowController
+from repro.runtime.executor import ShardTaskExecutor
+from repro.runtime.fleet import FleetManager
+from repro.runtime.placement import HostGroupExecutor, PlacementMap
+from repro.runtime.qcache import QueryCacheConfig, SemanticQueryCache
+from repro.runtime.window import BatchWindow
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Every serving-stack knob, named once.
+
+    Groups (all optional beyond the defaults):
+
+    * engine — ``rate`` (nominal sampling rate the window serves at),
+      ``method``, ``confidence``, ``ci``.
+    * topology — ``hosts`` (>= 2 builds a blocked ``PlacementMap`` +
+      ``HostGroupExecutor``; otherwise a single ``ShardTaskExecutor``),
+      ``replicas``, ``balanced``, ``workers`` (total across hosts),
+      ``allow_partial``, ``fault_hook`` (per-shard-task),
+      ``host_fault_hook`` (per-host, host groups only),
+      ``adaptive_workers``, ``max_retries``.
+    * budget — ``planner`` attaches a ``RatePlanner``
+      (``planner_config``) so queries may carry ``QueryBudget``s and
+      the engine degrades under pressure.
+    * cache — ``cache`` attaches a ``SemanticQueryCache``
+      (``cache_config``) keyed on the index's LSH signatures.
+    * window — ``window`` builds the ``BatchWindow`` frontend
+      (``max_batch``, ``max_delay_s``, ``max_pending``); ``adaptive``
+      adds the ``WindowController`` (``controller_config``).
+    * fleet — ``fleet`` wraps a host group in a ``FleetManager``
+      (``warm_fn``) for join/drain/crash.
+    """
+    # engine
+    rate: float = 0.25
+    method: str = "emapprox"
+    confidence: float = 0.95
+    ci: bool = False
+    # topology
+    hosts: int = 0
+    replicas: int = 1
+    balanced: bool = False
+    workers: int = 2
+    allow_partial: bool = False
+    fault_hook: Optional[Callable[[int, int], None]] = None
+    host_fault_hook: Optional[Callable[[int, Any], None]] = None
+    adaptive_workers: bool = False
+    max_retries: int = 2
+    # budget
+    planner: bool = False
+    planner_config: Optional[PlannerConfig] = None
+    # cache
+    cache: bool = False
+    cache_config: Optional[QueryCacheConfig] = None
+    # window
+    window: bool = False
+    adaptive: bool = True
+    max_batch: int = 32
+    max_delay_s: float = 0.002
+    max_pending: Optional[int] = None
+    controller_config: Optional[ControllerConfig] = None
+    seed: int = 0
+    # fleet
+    fleet: bool = False
+    warm_fn: Optional[Callable[[int, int, int], None]] = None
+
+    def __post_init__(self):
+        if self.hosts < 0:
+            raise ValueError(f"hosts must be >= 0, got {self.hosts}")
+        if self.workers < 1:
+            raise ValueError(f"workers must be >= 1, got {self.workers}")
+        if self.hosts < 2:
+            for flag in ("balanced", "fleet"):
+                if getattr(self, flag):
+                    raise ValueError(
+                        f"{flag}=True needs a host group (hosts >= 2), "
+                        f"got hosts={self.hosts}")
+            if self.host_fault_hook is not None:
+                raise ValueError("host_fault_hook needs a host group "
+                                 "(hosts >= 2)")
+        if self.hosts >= 2 and self.replicas < 0:
+            raise ValueError(f"replicas must be >= 0, got {self.replicas}")
+
+
+@dataclasses.dataclass
+class ServingStack:
+    """The wired layers, by name.  ``window``/``controller``/
+    ``planner``/``cache``/``fleet`` are None when not configured;
+    ``executor`` and ``engine`` always exist."""
+    config: ServeConfig
+    corpus: Any
+    index: Any
+    executor: Any
+    engine: QueryBatch
+    controller: Optional[WindowController] = None
+    planner: Optional[RatePlanner] = None
+    cache: Optional[SemanticQueryCache] = None
+    window: Optional[BatchWindow] = None
+    fleet: Optional[FleetManager] = None
+
+    def close(self) -> None:
+        """Idempotent bottom-up shutdown: drain the window, then stop
+        the executor pool(s)."""
+        if self.window is not None:
+            self.window.close()
+        self.executor.close()
+
+    def __enter__(self) -> "ServingStack":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def build_serving_stack(corpus, index, config: Optional[ServeConfig] = None,
+                        **overrides) -> ServingStack:
+    """Wire the full serving stack from one config.
+
+    ``config`` may be a ready ``ServeConfig``; keyword overrides are
+    applied on top (``build_serving_stack(c, i, hosts=2, cache=True)``
+    is the short form).  See ``ServeConfig`` for the knobs."""
+    cfg = config or ServeConfig()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    if cfg.hosts >= 2:
+        placement = PlacementMap.blocked(corpus.n_shards, cfg.hosts,
+                                         n_replicas=cfg.replicas)
+        executor = HostGroupExecutor(
+            placement,
+            workers_per_host=max(1, cfg.workers // cfg.hosts),
+            balanced=cfg.balanced,
+            allow_partial=cfg.allow_partial,
+            host_fault_hook=cfg.host_fault_hook,
+            fault_hook=cfg.fault_hook,
+            adaptive_workers=cfg.adaptive_workers,
+            max_retries=cfg.max_retries)
+    else:
+        executor = ShardTaskExecutor(
+            workers=cfg.workers,
+            fault_hook=cfg.fault_hook,
+            adaptive_workers=cfg.adaptive_workers,
+            allow_partial=cfg.allow_partial,
+            max_retries=cfg.max_retries)
+
+    controller = None
+    if cfg.window and cfg.adaptive:
+        controller = WindowController(cfg.controller_config
+                                      or ControllerConfig())
+
+    planner = None
+    if cfg.planner:
+        planner = RatePlanner(corpus.n_shards, controller=controller,
+                              config=cfg.planner_config)
+
+    cache = None
+    if cfg.cache:
+        cache = SemanticQueryCache(cfg.cache_config)
+
+    engine = QueryBatch(corpus, index, executor=executor,
+                        method=cfg.method, confidence=cfg.confidence,
+                        planner=planner, ci=cfg.ci, cache=cache)
+
+    window = None
+    if cfg.window:
+        window = BatchWindow(engine, cfg.rate,
+                             max_batch=cfg.max_batch,
+                             max_delay_s=cfg.max_delay_s,
+                             controller=controller,
+                             max_pending=cfg.max_pending,
+                             rng=np.random.default_rng(cfg.seed))
+
+    fleet = None
+    if cfg.fleet:
+        fleet = FleetManager(executor, warm_fn=cfg.warm_fn)
+
+    return ServingStack(config=cfg, corpus=corpus, index=index,
+                        executor=executor, engine=engine,
+                        controller=controller, planner=planner,
+                        cache=cache, window=window, fleet=fleet)

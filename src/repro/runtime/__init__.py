@@ -24,6 +24,10 @@
   ``fleet``      — elastic membership (``FleetManager``): host
                    join/drain/crash as first-class, audited operations
                    over the placement layer
+  ``qcache``     — the semantic query cache (``SemanticQueryCache``):
+                   per-query plans + full results memoized under the
+                   index's own LSH signatures, with TTL /
+                   placement-epoch / LRU invalidation
   ``chaos``      — deterministic fault injection (``FaultPlan``): a
                    seeded, scripted scenario DSL compiled onto the
                    executors' injection seams
@@ -40,6 +44,34 @@ the single-executor results.
 ``BatchWindow`` takes either executor flavor behind its engine — a
 single-host pool and a placement-split host group expose the same
 ``map_shard_batch`` surface.
+
+With a cache attached the serving dataflow per query is cache ->
+window -> executor: the engine probes the ``SemanticQueryCache``
+*before* planning (an exact LSH-signature hit returns the memoized
+result with zero scoring, zero rng draws, zero scans; a near-hit
+borrows the cached sampling plan — unbiased for any full-support
+distribution, Hansen-Hurwitz — and re-runs only the scan + reduce),
+the window keeps cache-served queries out of the controller's batch
+cost fit (``observe_batch(..., cached=n)``), and every cached plan is
+fenced by the executor's ``placement_epoch`` so no entry survives a
+fleet generation swap.  Degraded, pressured, and budgeted answers are
+never cached — a point-in-time decision must not replay as full
+fidelity.  Cookbook:
+
+    from repro.launch import build_serving_stack
+    stack = build_serving_stack(corpus, index, cache=True,
+                                cache_config=QueryCacheConfig(
+                                    max_entries=512, ttl_s=30.0,
+                                    hamming_radius=8))
+    stack.engine.execute(queries, 0.25)       # misses populate
+    stack.engine.execute(queries, 0.25)       # exact hits, no scans
+    stack.cache.record()                      # hit/near/miss counters
+
+(or hand-wire: ``QueryBatch(corpus, index, executor=...,
+cache=SemanticQueryCache(...))``).  The serving bench's ``--zipf`` arm
+hard-gates the contract: exact hits bit-for-bit equal to uncached
+execution, zero hits across scripted join/drain swaps, and a cached
+p50 strictly below the uncached one on the same skewed stream.
 
 Under overload the controller drives *two actuators*, in order:
 
@@ -134,5 +166,9 @@ from repro.runtime.placement import (  # noqa: F401
     HostFailure,
     HostGroupExecutor,
     PlacementMap,
+)
+from repro.runtime.qcache import (  # noqa: F401
+    QueryCacheConfig,
+    SemanticQueryCache,
 )
 from repro.runtime.window import BatchWindow  # noqa: F401

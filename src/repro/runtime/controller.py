@@ -286,12 +286,22 @@ class WindowController:
         self._last_arrival = now
 
     def observe_batch(self, n: int, service_s: float,
-                      scan_s: Optional[float] = None) -> None:
+                      scan_s: Optional[float] = None,
+                      cached: int = 0) -> None:
         """One window of ``n`` queries took ``service_s`` to execute.
         ``scan_s`` is the executor's per-job service telemetry (the
         shared-scan share of the batch; see
         ``ShardTaskExecutor.last_job``) — tracked so saturation can be
-        attributed to scan work vs engine overhead."""
+        attributed to scan work vs engine overhead.
+
+        ``cached`` is how many of the ``n`` were served straight from
+        the semantic query cache (``runtime/qcache`` exact hits): they
+        cost ~no service time, so they are excluded from the cost fit
+        — folding them in would deflate the fitted per-query cost and
+        make the planner promise capacity the uncached path cannot
+        deliver.  An all-cached window is dropped entirely (near-hits
+        still scan, so they count as executed)."""
+        n = int(n) - int(cached)
         if n < 1 or service_s < 0:
             return
         a = self.config.service_alpha

@@ -299,5 +299,10 @@ class BatchWindow:
                 executor = getattr(self.engine, "executor", None)
                 job = getattr(executor, "last_job", None)
                 scan_s = job["wall_s"] if job else None
+                # semantic-cache exact hits never touched the executor;
+                # keep them out of the fitted batch cost model
+                report = getattr(self.engine, "last_report", None)
+                cache_meta = getattr(report, "cache", None)
+                cached_n = cache_meta.get("hits", 0) if cache_meta else 0
                 self.controller.observe_batch(len(claimed), service_s,
-                                              scan_s)
+                                              scan_s, cached=cached_n)

@@ -272,9 +272,9 @@ class _FixedController(WindowController):
         self.arrivals += 1
         super().observe_arrival(now)
 
-    def observe_batch(self, n, service_s, scan_s=None):
+    def observe_batch(self, n, service_s, scan_s=None, cached=0):
         self.batches.append((n, service_s, scan_s))
-        super().observe_batch(n, service_s, scan_s)
+        super().observe_batch(n, service_s, scan_s, cached=cached)
 
 
 def test_backpressure_at_queue_bound():
