@@ -24,7 +24,15 @@ exact LSH-signature hits that skip sampling, scanning, and the
 executor — this row's throughput collapses if hits stop bypassing
 execution or the probe itself grows a per-query serialization
 point; its baseline sits far below the measured hit-path qps
-because the floor only needs to catch that collapse).  The
+because the floor only needs to catch that collapse), and
+``batched_mega`` (the one-launch scan-over-shards megakernel path:
+every chunk of full-fleet similarity scans routed as ONE Pallas
+launch over the packed multi-shard payload instead of one task per
+shard — this row's throughput collapses if the megakernel route stops
+engaging and the scan silently falls back to per-shard dispatch; its
+baseline sits at roughly half the measured qps because the fallback
+costs ~3x, so the floor catches the collapse without flapping on
+container noise).  The
 wide tolerance absorbs runner-to-runner CPU variance while still
 catching the real regressions this gate exists for: a serialization
 point sneaking back into the batched scoring path, postings caches
@@ -54,7 +62,8 @@ import sys
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
                                 "serve_smoke.json")
 DEFAULT_KEYS = ("batched_fused,batched_hosts2,batched_lb2,"
-                "batched_budget,batched_chaos,batched_cached")
+                "batched_budget,batched_chaos,batched_cached,"
+                "batched_mega")
 
 
 def check_key(current: dict, baseline: dict, key: str,

@@ -400,6 +400,42 @@ def serve_section(serve: Dict) -> str:
             "",
         ]
 
+    mg = serve.get("megascan")
+    if mg:
+        from benchmarks.roofline import analyze_megascan, megascan_table
+        rendered.add("megascan")
+        meas = mg.get("measured") or {}
+        ds = mg.get("dispatch_share") or {}
+        launches = mg.get("launches") or {}
+        jobs = mg.get("host_megascan_jobs")
+        lines += [
+            "### One-launch scan-over-shards megakernel",
+            "",
+            f"{mg.get('queries', '?')} full-fleet similarity scans over "
+            f"{mg.get('shards', '?')} shards: "
+            f"**{launches.get('mega', '?')}** launch vs "
+            f"{launches.get('per_shard', '?')} per-shard launches — "
+            f"measured **{meas.get('win', float('nan')):.2f}x** faster "
+            f"({meas.get('mega_s', float('nan')):.4f}s vs "
+            f"{meas.get('per_shard_s', float('nan')):.4f}s, hard gate: "
+            f"one-launch must win), dispatch share "
+            f"{ds.get('per_shard', float('nan')):.2f} -> "
+            f"**{ds.get('mega', float('nan')):.2f}** (hard gate: must "
+            f"drop)",
+            "",
+            "- group-vs-per-shard gather parity on ragged plans "
+            "(bit-for-bit, hard gate): "
+            + ", ".join(f"{k}={v}"
+                        for k, v in (mg.get("parity") or {}).items())
+            + (f"; host-group parity={mg['host_group_parity']}"
+               if "host_group_parity" in mg else "")
+            + (f", per-host launches {jobs}" if jobs else ""),
+            "",
+            megascan_table([analyze_megascan(r) for r in
+                            mg.get("roofline_records", [])]),
+            "",
+        ]
+
     unknown = [k for k in serve if k not in rendered]
     for k in unknown:
         lines.append(f"- unrecognized record `{k}`: "

@@ -133,6 +133,25 @@ same mixed workload (aggregation / Boolean / ranked, paper Table I):
                     hits cross the placement-epoch bump, every entry
                     drops as ``stale_epoch``, and post-swap results
                     match a plain engine on the new topology
+  batched_mega    - the one-launch scan-over-shards megakernel row:
+                    every query in the chunk scans the FULL fleet (the
+                    high-shards-per-host regime), and the chunk's scan
+                    fns come from one ``MegascanSpec``, so the executor
+                    routes each chunk as ONE Pallas launch over the
+                    packed multi-shard payload (double-buffered shard
+                    prefetch on TPU) instead of one task per shard.
+                    Floored by the regression gate — the row collapses
+                    if the megakernel route stops engaging and the
+                    scan falls back to per-shard dispatch.  Alongside
+                    it a hard-gated ``megascan`` record checks
+                    bit-for-bit group-vs-per-shard gather parity on
+                    ragged plans (sum AND ranked modes, single- and
+                    host-group executors), that the one-launch wall
+                    beats the per-shard route's on the same plan, and
+                    that the roofline dispatch share drops — the
+                    dispatch-bound -> bandwidth-bound claim as a
+                    rendered row (``python -m benchmarks.roofline
+                    --serve BENCH_serve.json``)
 
 Each mode runs ``trials`` times and the best wall time is reported
 (the container CPU is shared; best-of filters scheduler noise).
@@ -331,6 +350,39 @@ def _run_batched(corpus, index, queries, rate, executor, seed, batch_size,
     return lat
 
 
+def _mega_chunks(corpus, index, n, batch_size, rng):
+    """Pre-built ``(fns, plan)`` chunks for the batched_mega arm: every
+    query is a similarity-mass scan over the FULL fleet (the
+    high-shards-per-host regime the megakernel targets), and each
+    chunk's fns come from one ``MegascanSpec`` — so the megakernel
+    route runs the chunk as ONE launch (per host on a host-group
+    executor) where the per-shard route pays ``n_shards`` tasks.
+    Built once and reused across trials, like the budget/cache engines:
+    the warm pass is where payload packing and jit land."""
+    from repro.kernels.megascan import MegascanSpec
+    words = pick_query_words(corpus, 3 * n, rng)
+    all_shards = list(range(corpus.n_shards))
+    chunks = []
+    for i in range(0, n, batch_size):
+        m = min(batch_size, n - i)
+        triples = [[int(words[(3 * (i + j) + t) % len(words)])
+                    for t in range(3)] for j in range(m)]
+        spec = MegascanSpec(index, index.query_vectors(triples))
+        chunks.append((spec.scan_fns(), [all_shards] * m))
+    return chunks
+
+
+def _run_mega(corpus, chunks, executor, seed):
+    """The one-launch scan arm: each pre-built chunk goes through
+    ``map_shard_batch(megakernel=True)``."""
+    lat = []
+    for fns, plan in chunks:
+        t0 = time.perf_counter()
+        executor.map_shard_batch(corpus, plan, fns, megakernel=True)
+        lat.append((time.perf_counter() - t0, len(plan)))
+    return lat
+
+
 def _run_windowed(corpus, index, queries, rate, executor, seed, batch_size,
                   window_s=0.002):
     """BatchWindow frontend: queries arrive one by one; windows close by
@@ -462,6 +514,155 @@ def _gather_parity(queries, got, want) -> dict:
     for q, g, w in zip(queries, got, want):
         parity[q.kind] &= _result_matches(q, g, w)
     return parity
+
+
+def _mega_scan_equal(got, want) -> bool:
+    """Bit-for-bit equality of one query's per-shard scan dict — python
+    floats in sum mode, ``{doc_ids, values}`` arrays in ranked mode."""
+    if got.keys() != want.keys():
+        return False
+    for s, g in got.items():
+        w = want[s]
+        if isinstance(g, dict):
+            if not (np.array_equal(g["doc_ids"], w["doc_ids"])
+                    and np.array_equal(g["values"], w["values"])):
+                return False
+        elif g != w:
+            return False
+    return True
+
+
+def _megascan_report(corpus, index, n_hosts, workers, batch_size) -> dict:
+    """The one-launch megascan record (hard-gated).
+
+    Untimed parity checks plus a timed dispatch-amortization micro:
+
+      1. group-vs-per-shard parity: ``map_shard_batch(megakernel=True)``
+         must gather BIT-FOR-BIT what ``megakernel=False`` (the
+         per-shard fused path) gathers, on ragged plans — lone-shard
+         queries, strict subsets, the full fleet — in sum mode AND
+         ranked top-k mode.  The block-aligned payload pads every shard
+         independently, so partials must not move across groupings.
+      2. host-group parity: the same plans through an N-host
+         ``HostGroupExecutor`` (one launch per host) must match too,
+         and every host's executor must report megascan jobs — proof
+         the route engaged rather than silently falling back.
+      3. the roofline claim: per-shard (launches = n_shards) vs
+         megascan (launches = 1) records through
+         ``benchmarks.roofline.analyze_megascan`` — the megascan's
+         dispatch share must drop, and its measured best-of-3 wall on
+         the full-fleet plan must beat the per-shard route's.
+
+    Returns the record, including ``roofline_records`` (rendered by
+    ``python -m benchmarks.roofline --serve BENCH_serve.json``)."""
+    from benchmarks.roofline import analyze_megascan
+    from repro.kernels.megascan import MegascanSpec
+    from repro.runtime import HostGroupExecutor, PlacementMap
+    from repro.runtime.executor import ShardTaskExecutor
+
+    rng = np.random.default_rng(23)
+    n_shards = corpus.n_shards
+    b = max(4, min(12, batch_size))
+    words = pick_query_words(corpus, 3 * b, rng)
+    triples = [[int(words[(3 * i + j) % len(words)]) for j in range(3)]
+               for i in range(b)]
+    vecs = index.query_vectors(triples)
+    plans = []
+    for i in range(b):
+        if i % 4 == 0:
+            plans.append([int(rng.integers(n_shards))])
+        elif i % 4 == 1:
+            sub = rng.choice(n_shards, size=max(2, n_shards // 2),
+                             replace=False)
+            plans.append(sorted(int(s) for s in sub))
+        else:
+            plans.append(list(range(n_shards)))
+
+    ex = ShardTaskExecutor(workers=workers)
+    sum_spec = MegascanSpec(index, vecs)
+    sum_fns = sum_spec.scan_fns()
+    ranked_fns = MegascanSpec(index, vecs, ranked_k=10).scan_fns()
+    parity = {}
+    for label, fns in (("sum", sum_fns), ("ranked", ranked_fns)):
+        mega = ex.map_shard_batch(corpus, plans, fns, megakernel=True)
+        per = ex.map_shard_batch(corpus, plans, fns, megakernel=False)
+        parity[label] = all(
+            _mega_scan_equal(m, p) for m, p in zip(mega, per))
+        if not parity[label]:
+            raise RuntimeError(
+                f"megascan {label}-mode group scan does not match the "
+                f"per-shard fused path bit-for-bit on ragged plans")
+
+    host_launches = None
+    if n_hosts >= 2:
+        hg = HostGroupExecutor(
+            PlacementMap.blocked(n_shards, n_hosts, n_replicas=1),
+            workers_per_host=max(1, workers // n_hosts))
+        hmega = hg.map_shard_batch(corpus, plans, sum_fns)
+        per = ex.map_shard_batch(corpus, plans, sum_fns, megakernel=False)
+        if not all(_mega_scan_equal(m, p) for m, p in zip(hmega, per)):
+            raise RuntimeError(
+                "megascan host-group gather does not match the "
+                "per-shard fused path bit-for-bit")
+        host_launches = {h: hx.stats["megascan_jobs"]
+                         for h, hx in hg.hosts.items()}
+        if not all(v > 0 for v in host_launches.values()):
+            raise RuntimeError(
+                f"megakernel route did not engage on every host: "
+                f"{host_launches}")
+        hg.close()
+
+    full = [list(range(n_shards))] * b
+
+    def best_of(megakernel):
+        best = None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            ex.map_shard_batch(corpus, full, sum_fns,
+                               megakernel=megakernel)
+            dt = time.perf_counter() - t0
+            best = dt if best is None or dt < best else best
+        return best
+
+    ex.map_shard_batch(corpus, full, sum_fns, megakernel=True)  # warm
+    t_mega = best_of(True)
+    rec_mega = dict(sum_spec.last_record, name="megascan_one_launch",
+                    measured_wall_s=t_mega)
+    t_per = best_of(False)
+    # same payload, same flops, n_shards launches, no cross-shard
+    # prefetch — slightly flatters the per-shard route (it actually
+    # repeats the query projection per launch), which only makes the
+    # dispatch-share gate harder to pass
+    rec_per = dict(rec_mega, name="megascan_per_shard",
+                   launches=n_shards, double_buffer=False,
+                   measured_wall_s=t_per, wall_s=t_per)
+    row_mega = analyze_megascan(rec_mega)
+    row_per = analyze_megascan(rec_per)
+    if row_mega["dispatch_share"] >= row_per["dispatch_share"]:
+        raise RuntimeError(
+            f"megascan dispatch share {row_mega['dispatch_share']:.3f} "
+            f"did not drop below the per-shard route's "
+            f"{row_per['dispatch_share']:.3f}")
+    if t_mega >= t_per:
+        raise RuntimeError(
+            f"megascan one-launch wall {t_mega:.4f}s is not below the "
+            f"per-shard route's {t_per:.4f}s on the full-fleet plan")
+    ex.close()
+    return dict(
+        parity=parity,
+        host_group_parity=n_hosts >= 2,
+        host_megascan_jobs=host_launches,
+        shards=n_shards, queries=b,
+        launches=dict(mega=1, per_shard=n_shards),
+        measured=dict(mega_s=t_mega, per_shard_s=t_per,
+                      win=t_per / t_mega),
+        dispatch_share=dict(mega=row_mega["dispatch_share"],
+                            per_shard=row_per["dispatch_share"]),
+        dominant=dict(mega=row_mega["dominant"],
+                      per_shard=row_per["dominant"]),
+        spec_stats=dict(sum_spec.stats),
+        roofline_records=[rec_per, rec_mega],
+    )
 
 
 def _placement_report(corpus, index, queries, rate, executor, n_hosts,
@@ -1185,6 +1386,14 @@ def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
         arms["batched_budget"] = lambda seed: _run_batched(
             corpus, index, budget_queries, rate, executor, seed, batch_size,
             engine=budget_engine)
+        # the one-launch scan arm: chunks prebuilt (spec + payload
+        # reused across trials), every query scanning the full fleet —
+        # one megakernel launch per chunk vs n_shards tasks per chunk
+        # on the per-shard route
+        mega_chunks = _mega_chunks(corpus, index_doc, n_queries,
+                                   batch_size, np.random.default_rng(29))
+        arms["batched_mega"] = lambda seed: _run_mega(
+            corpus, mega_chunks, executor, seed)
     arm_n = {}                      # per-arm served-query count override
     zipf_stream = cache_stack = None
     if zipf:
@@ -1355,6 +1564,16 @@ def run(n_queries: int = 96, rate: float = 0.15, batch_size: int = 48,
                                          executor, batch_size)
 
     if not chaos_only:
+        report["megascan"] = _megascan_report(
+            corpus, index_doc, hosts, workers, batch_size)
+        mg = report["megascan"]
+        csv_row("serve_megascan", 0.0,
+                f"win {mg['measured']['win']:.2f}x over per-shard, "
+                f"dispatch share "
+                f"{mg['dispatch_share']['per_shard']:.2f} -> "
+                f"{mg['dispatch_share']['mega']:.2f}, "
+                f"dominant {mg['dominant']['per_shard']} -> "
+                f"{mg['dominant']['mega']}")
         report["speedup_batched_vs_per_query"] = (
             report["per_query"]["wall_s"] / report["batched"]["wall_s"])
         report["speedup_batched_vs_scan"] = (

@@ -390,12 +390,42 @@ class ApproxIndex:
         out[:, nonempty] = np.add.reduceat(vals, starts[nonempty], axis=1)
         return out
 
+    def megascan_payload(self, shard_ids, *, tm: int = 256):
+        """Block-aligned packed signature payload for the one-launch
+        megascan (kernels/megascan): the named shards' shard-sorted doc
+        signatures, each padded independently to TM-row blocks and
+        concatenated, with row -> shard-slot and row -> doc-id maps.
+        Cached per ``(shard_ids, tm)`` — the serving path re-scans the
+        same host groups every window, and the payload (like the fused
+        device arrays) must not be re-uploaded per batch."""
+        if self.doc_sig is None:
+            raise ValueError("megascan requires doc signatures")
+        from repro.kernels.megascan import ops as mega_ops
+        ids = tuple(int(s) for s in shard_ids)
+        key = (ids, int(tm))
+        cache = getattr(self, "_megascan_pay", None)
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_megascan_pay", cache)
+        payload = cache.get(key)
+        if payload is None:
+            order, starts, counts, _, sig_sorted = self._shard_sorted_docs()
+            segments = [
+                (sig_sorted[starts[s]:starts[s] + counts[s]],
+                 order[starts[s]:starts[s] + counts[s]])
+                for s in ids
+            ]
+            payload = mega_ops.build_payload(segments, tm=tm,
+                                             shard_ids=ids)
+            cache[key] = payload
+        return payload
+
     def attach_corpus(self, corpus) -> "ApproxIndex":
         """Record the doc->shard map (needed for doc-granular scoring).
         Drops the shard-sort and device-array caches — both are derived
         from the map."""
         self._doc_shard_ids = corpus.doc_shard_map()
-        for cached in ("_shard_sort", "_fused_dev"):
+        for cached in ("_shard_sort", "_fused_dev", "_megascan_pay"):
             if hasattr(self, cached):
                 object.__delattr__(self, cached)
         return self

@@ -10,6 +10,20 @@
   negsamp/  - fused PV-DBOW negative-sampling training step (the
               offline T-Time cost in paper Table II)
   kmeans/   - spherical k-means assignment (paper Sec. IV-D allocation)
+  megascan/ - the one-launch scan-over-shards megakernel: a host's
+              shard signatures packed into a block-aligned payload
+              (every shard padded independently to TM-row blocks) and
+              streamed through VMEM in a single launch — on TPU via
+              explicit double-buffered DMA (prefetch shard block j+1
+              while the MXU scores block j) — emitting per-(query,
+              shard) partials bit-for-bit identical to a per-shard
+              launch sequence of the asym/hamming segment-sum kernels.
+              Ranked mode replaces ``jax.lax.top_k`` with an in-tile
+              bitonic sort network (lane-padded K) as the epilogue.
+              ``MegascanSpec`` is the executor-facing handle: a
+              megakernel-enabled ``ShardTaskExecutor`` routes a whole
+              shard group as ONE launch (runtime/executor
+              ``_run_group_scan``) instead of one task per shard
 
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
 ops.py (jit'd public wrapper with an interpret fallback on CPU) and

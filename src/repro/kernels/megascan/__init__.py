@@ -1,0 +1,12 @@
+"""One-launch scan-over-shards megakernel (see ``kernel`` docstring).
+
+``ops`` exposes the payload builder, the jit'd wrappers, and the
+executor-facing ``MegascanSpec``; ``ref`` the slow oracles.
+"""
+from repro.kernels.megascan.ops import (  # noqa: F401
+    MegascanPayload,
+    MegascanSpec,
+    build_payload,
+    megascan_segment_sums,
+    megascan_topk,
+)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the megascan, built on the per-mode refs.
+
+These score the *packed payload* the slow-but-obvious way: full
+[B, n_rows] similarity matrix, padding rows masked by their
+out-of-range slot, then a dense segment reduction / per-slot top-k.
+Used by tests to pin the one-launch kernels independently of the
+per-shard fused path they must also match bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.asym.ref import asym_exp_similarity_ref
+from repro.kernels.hamming.ref import hamming_similarity_ref
+from repro.kernels.megascan.ops import MegascanPayload
+
+
+def _payload_sims(payload: MegascanPayload, queries, planes, bits: int,
+                  *, mode: str, temperature: float) -> jax.Array:
+    if mode == "asym":
+        return asym_exp_similarity_ref(
+            jnp.asarray(queries, jnp.float32), payload.sig,
+            jnp.asarray(planes, jnp.float32), bits, temperature)
+    if mode == "hamming":
+        # the hamming oracle folds temperature in afterwards:
+        # exp(cos)**t == exp(t*cos)
+        return hamming_similarity_ref(
+            jnp.asarray(queries, jnp.uint32), payload.sig,
+            bits) ** temperature
+    raise ValueError(f"unknown megascan mode {mode!r}")
+
+
+def megascan_segment_sums_ref(payload: MegascanPayload, queries, planes,
+                              bits: int, *, mode: str = "asym",
+                              temperature: float = 1.0) -> np.ndarray:
+    """[B, n_slots] float64 per-(query, slot) sums over real rows."""
+    sims = np.asarray(_payload_sims(payload, queries, planes, bits,
+                                    mode=mode, temperature=temperature),
+                      np.float64)
+    slots = np.asarray(payload.slots).ravel()
+    out = np.zeros((sims.shape[0], payload.n_slots), np.float64)
+    for s in range(payload.n_slots):
+        out[:, s] = sims[:, slots == s].sum(axis=1)
+    return out
+
+
+def megascan_topk_ref(payload: MegascanPayload, queries, planes,
+                      bits: int, k: int, *, temperature: float = 1.0,
+                      ) -> "tuple[np.ndarray, np.ndarray]":
+    """([B, n_slots, k] int64 doc ids, [B, n_slots, k] float64 values),
+    padded with -1 / -inf like ``megascan_topk``."""
+    sims = np.asarray(_payload_sims(payload, queries, planes, bits,
+                                    mode="asym", temperature=temperature),
+                      np.float64)
+    slots = np.asarray(payload.slots).ravel()
+    b = sims.shape[0]
+    ids = np.full((b, payload.n_slots, k), -1, np.int64)
+    vals = np.full((b, payload.n_slots, k), -np.inf, np.float64)
+    for s in range(payload.n_slots):
+        rows = np.nonzero(slots == s)[0]
+        if rows.size == 0:
+            continue
+        v = sims[:, rows]
+        kk = min(k, rows.size)
+        order = np.argsort(-v, axis=1, kind="stable")[:, :kk]
+        ids[:, s, :kk] = payload.doc_idx[rows[order]]
+        vals[:, s, :kk] = np.take_along_axis(v, order, axis=1)
+    return ids, vals

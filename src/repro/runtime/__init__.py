@@ -45,6 +45,27 @@ the single-executor results.
 single-host pool and a placement-split host group expose the same
 ``map_shard_batch`` surface.
 
+The shared scan has two dispatch shapes.  Per-shard (the default for
+arbitrary fns): ``run_shared_scan`` builds one composite task per
+shard in the union plan and the executor schedules them across its
+pool — retry, speculation, and chaos injection all at shard-task
+granularity.  One-launch (the megakernel route): when every fn in the
+batch comes from one ``kernels.megascan.MegascanSpec``, the composite
+closure carries the spec and a megakernel-enabled executor routes the
+WHOLE shard group as a single Pallas launch over the block-aligned
+packed payload (``_run_group_scan``) — per-(query, shard) partials
+come back in exactly the layout the gather already consumes,
+bit-for-bit identical to the per-shard path, so everything above the
+executor (placement split, balancing, chaos scripts, cache fencing)
+is untouched.  On a ``HostGroupExecutor`` this becomes one launch per
+host per job: the residency split happens first, then each host's
+``ShardTaskExecutor`` fuses its own group.  Fault seams keep per-shard
+granularity (hooks fire for every shard in the group before the
+launch) while failure/retry is at-least-once at group width;
+``megakernel=False`` on ``map_shard_batch`` pins the per-shard fused
+path — the parity reference the serving bench's ``megascan`` record
+hard-gates against.
+
 With a cache attached the serving dataflow per query is cache ->
 window -> executor: the engine probes the ``SemanticQueryCache``
 *before* planning (an exact LSH-signature hit returns the memoized

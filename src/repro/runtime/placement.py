@@ -574,14 +574,26 @@ class HostGroupExecutor:
         corpus,
         plan: Sequence[Sequence[int]],
         fns: Sequence[Callable[[Any], Any]],
+        *,
+        megakernel: "bool | None" = None,
     ) -> List[Dict[int, Any]]:
         """Locality-split shared scan over a batch of queries: the
         union of the per-query plans is inverted once, split by
         residency, scanned per host (each resident shard visited once,
         all interested queries evaluated in that visit), and gathered
         back into one ``{shard_id: result}`` map per query — exactly
-        what the single-executor ``map_shard_batch`` produces."""
-        return run_shared_scan(self.map_shards, corpus, plan, fns)
+        what the single-executor ``map_shard_batch`` produces.
+
+        With ``MegascanSpec`` scan fns (``megakernel`` None/True, see
+        ``run_shared_scan``) each *host* becomes one Pallas launch: the
+        spec-tagged composite flows through the residency split to the
+        per-host ``ShardTaskExecutor``s, whose megakernel route fuses
+        their whole group — one task per host instead of one per
+        shard-group, with requeue/balance/chaos semantics untouched
+        because they all act on the host groups, not on what runs
+        inside one."""
+        return run_shared_scan(self.map_shards, corpus, plan, fns,
+                               megakernel=megakernel)
 
     # ------------------------------------------------------------------
     # introspection
