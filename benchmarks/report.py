@@ -158,7 +158,7 @@ def serve_section(serve: Dict) -> str:
     record kind without a renderer still prints a one-line summary
     (nothing in the JSON is dropped on the floor)."""
     rendered = {"config", "load_sweep", "placement", "balance", "budget",
-                "chaos", "cache"}
+                "chaos", "cache", "ingest"}
     lines = ["## §Serving", ""]
     cfg = serve.get("config", {})
     if cfg:
@@ -397,6 +397,50 @@ def serve_section(serve: Dict) -> str:
             f"entries, drain dropped "
             f"{(fl.get('drain') or {}).get('stale_dropped', '?')} — "
             f"zero cache hits crossed either swap (hard gate)",
+            "",
+        ]
+
+    ing = serve.get("ingest")
+    if ing:
+        sw = ing.get("swap") or {}
+        la = ing.get("latency") or {}
+        cf = ing.get("cache_fence") or {}
+        fr = sw.get("freshness") or {}
+        gen = sw.get("generation") or {}
+        tr = ing.get("timed_row") or {}
+        lines += [
+            "### Live ingest (append -> generation -> fence)",
+            "",
+            f"Mid-run append of **{sw.get('n_new', '?')}** sentinel "
+            f"docs ({100 * ing.get('fraction', 0):.0f}% of the corpus) "
+            f"racing the serving loop — "
+            f"{sw.get('served_during_swap', '?')} batches served "
+            f"during the swap ({sw.get('old_generation_batches', '?')} "
+            f"old-generation, {sw.get('new_generation_batches', '?')} "
+            f"new), every one bit-for-bit one of the two reference "
+            f"worlds (hard gate: no torn reads, zero loss)",
+            "",
+            f"- freshness: sentinel-phrase count "
+            f"{fr.get('before', '?'):.0f} -> "
+            f"**{fr.get('after', '?'):.0f}** at error bound 0 after "
+            f"the swap; generation "
+            f"(placement={gen.get('placement', '?')}, "
+            f"content={gen.get('content', '?')})",
+            f"- zero pause: serving p99 with the paced writer racing "
+            f"**{la.get('ingest_p99_ms', float('nan')):.3f} ms** vs "
+            f"{la.get('no_ingest_p99_ms', float('nan')):.3f} ms "
+            f"no-ingest — **{la.get('ratio', float('nan')):.2f}x** "
+            f"(hard gate: <= {la.get('bound', '?')}x, "
+            f"{la.get('passes', '?')} pool passes per trial)",
+            f"- content-axis cache fence: "
+            f"{cf.get('stale_dropped', '?')}/{cf.get('pool', '?')} "
+            f"warm entries dropped as stale across the step, zero "
+            f"stale hits, post-ingest re-serve bit-for-bit a plain "
+            f"engine on the appended world (hard gate)",
+            f"- timed arm: {tr.get('steps', '?')} steps, "
+            f"{tr.get('docs_appended', '?')} docs appended, "
+            f"{tr.get('swaps', '?')} swaps, "
+            f"{tr.get('shards_added', '?')} shards added",
             "",
         ]
 

@@ -52,6 +52,7 @@ from repro.core import lsh as lsh_mod
 from repro.core import pv_dbow as pv
 from repro.core.sampling import similarity_probabilities
 from repro.data.store import ShardedCorpus, atomic_savez
+from repro.runtime.generation import GenerationClock
 
 
 @dataclasses.dataclass
@@ -82,6 +83,34 @@ class ApproxIndex:
     # exp(beta cos) ~ exp(PMI - log k) ~ p(q|d) (paper Eq 5); see
     # PVDBOWConfig.temperature.
     temperature: float = 1.0
+    # The joint word/doc mean subtracted by build_index(center=True) —
+    # persisted so live ingest can put incrementally inferred doc
+    # vectors through the identical centering transform (None for
+    # uncentered indexes and pre-PR-10 saves).
+    center_mean: Optional[np.ndarray] = None
+
+    # ------------------------------------------------------------------
+    # content generation
+    # ------------------------------------------------------------------
+    @property
+    def clock(self) -> GenerationClock:
+        """The generation authority this index bumps its *content* axis
+        through.  Lazily a private clock so a standalone index works
+        un-wired; ``build_serving_stack`` rebinds it to the stack's
+        shared clock via ``use_clock`` so the cache/executor fence on
+        the same handle.  Kept off the dataclass fields: it is identity
+        state, not index content — ``dataclasses.replace`` (the ingest
+        refresh) and save/load must not carry it."""
+        c = getattr(self, "_gen_clock", None)
+        if c is None:
+            c = GenerationClock()
+            object.__setattr__(self, "_gen_clock", c)
+        return c
+
+    def use_clock(self, clock: GenerationClock) -> "ApproxIndex":
+        """Bind this index to a shared ``GenerationClock``; returns self."""
+        object.__setattr__(self, "_gen_clock", clock)
+        return self
 
     # ------------------------------------------------------------------
     # query-time scoring
@@ -395,14 +424,17 @@ class ApproxIndex:
         megascan (kernels/megascan): the named shards' shard-sorted doc
         signatures, each padded independently to TM-row blocks and
         concatenated, with row -> shard-slot and row -> doc-id maps.
-        Cached per ``(shard_ids, tm)`` — the serving path re-scans the
-        same host groups every window, and the payload (like the fused
-        device arrays) must not be re-uploaded per batch."""
+        Cached per ``(shard_ids, tm, content generation)`` — the serving
+        path re-scans the same host groups every window, and the payload
+        (like the fused device arrays) must not be re-uploaded per
+        batch; the content axis in the key means an ``attach_corpus``
+        content bump retires every stale payload without the cache dict
+        having to be cleared by hand."""
         if self.doc_sig is None:
             raise ValueError("megascan requires doc signatures")
         from repro.kernels.megascan import ops as mega_ops
         ids = tuple(int(s) for s in shard_ids)
-        key = (ids, int(tm))
+        key = (ids, int(tm), self.clock.current().content)
         cache = getattr(self, "_megascan_pay", None)
         if cache is None:
             cache = {}
@@ -423,11 +455,17 @@ class ApproxIndex:
     def attach_corpus(self, corpus) -> "ApproxIndex":
         """Record the doc->shard map (needed for doc-granular scoring).
         Drops the shard-sort and device-array caches — both are derived
-        from the map."""
+        from the map — and bumps the *content* generation: anything
+        keyed on what this index answers from (semantic-cache entries,
+        megascan payloads) is stale the moment a new corpus attaches.
+        (Pre-PR-10 only the derived caches were dropped; a semantic
+        cache fenced on placement alone would keep serving estimates
+        computed over the old corpus.)"""
         self._doc_shard_ids = corpus.doc_shard_map()
         for cached in ("_shard_sort", "_fused_dev", "_megascan_pay"):
             if hasattr(self, cached):
                 object.__delattr__(self, cached)
+        self.clock.bump_content()
         return self
 
     def shard_probabilities(self, query_word_ids: Sequence[int]) -> np.ndarray:
@@ -469,6 +507,7 @@ class ApproxIndex:
                 temperature=self.temperature, lsh_mode=self.lsh_mode,
                 use_kernel=self.use_kernel, granularity=self.granularity,
                 has_doc_shard_ids=self._doc_shard_ids is not None,
+                has_center_mean=self.center_mean is not None,
             ))),
         )
         if self.doc_vecs is not None:
@@ -476,6 +515,8 @@ class ApproxIndex:
             payload["doc_sig"] = self.doc_sig
         if self._doc_shard_ids is not None:
             payload["doc_shard_ids"] = np.asarray(self._doc_shard_ids, np.int64)
+        if self.center_mean is not None:
+            payload["center_mean"] = np.asarray(self.center_mean, np.float32)
         atomic_savez(path, **payload)
 
     @staticmethod
@@ -497,6 +538,11 @@ class ApproxIndex:
             granularity=meta.get("granularity", "shard"),
             _doc_shard_ids=(z["doc_shard_ids"]
                             if meta.get("has_doc_shard_ids") else None),
+            # pre-PR-10 saves lack the centering mean; such an index
+            # still loads and serves — it just cannot host live ingest
+            # with bit-consistent centering
+            center_mean=(z["center_mean"]
+                         if meta.get("has_center_mean") else None),
         )
 
     def nbytes(self) -> int:
@@ -544,6 +590,7 @@ def build_index(
     lsh_cfg = lsh_cfg or lsh_mod.LSHConfig()
     word_vecs = np.asarray(model.word_vecs, np.float32)
     doc_vecs = np.asarray(model.doc_vecs, np.float32)
+    mean = None
     if center:
         mean = 0.5 * (word_vecs.mean(axis=0) + doc_vecs.mean(axis=0))
         word_vecs = _center_and_unit(word_vecs, mean)
@@ -577,4 +624,98 @@ def build_index(
         lsh_mode=lsh_mode,
         granularity=granularity,
         _doc_shard_ids=corpus.doc_shard_map() if granularity == "doc" else None,
+        center_mean=mean,
     )
+
+
+def refresh_appended(
+    index: ApproxIndex,
+    corpus: ShardedCorpus,
+    model: pv.PVDBOWModel,
+    cfg: pv.PVDBOWConfig,
+    appended_docs: Sequence[np.ndarray],
+    affected_shards: Sequence[int],
+    *,
+    infer_steps: int = 50,
+    infer_pause_s: float = 0.0,
+) -> ApproxIndex:
+    """Incremental index refresh for the live-ingest append path.
+
+    ``corpus`` is the grown corpus (``ShardedCorpus.append_documents``),
+    ``appended_docs`` the token arrays appended — in order, so their
+    dense global ids start at ``index.n_docs`` — and
+    ``affected_shards`` the shard ids whose membership changed.  New
+    doc vectors come from *frozen-model* PV-DBOW inference (the word
+    matrix fixed, ``pv_dbow.infer_doc_vectors``), pass through the
+    identical centering transform the build applied
+    (``index.center_mean``), and are signed on the numpy path —
+    bit-identical to the jax signing of the build.  Only the affected
+    shard centroids/signatures are recomputed (the same mean + sign
+    ops as the build, so untouched rows are byte-identical and touched
+    rows match a from-scratch rebuild); doc-frequency and length stats
+    take exact integer deltas.  ``infer_pause_s`` is the writer's
+    cooperative GIL yield between inference steps (result-neutral; see
+    ``pv_dbow.infer_doc_vector``) so concurrent serving threads are
+    never stalled for more than one dispatch.
+
+    Returns a NEW ``ApproxIndex`` sharing the old one's generation
+    clock — derived caches (sign matrices, fused device arrays,
+    megascan payloads) start empty on the new object, and the *caller*
+    bumps the content generation after swapping the new index in
+    (swap-then-bump: a reader that races sees new refs under the old
+    generation, which at worst inserts an immediately-stale cache
+    entry, never serves one)."""
+    if index.doc_vecs is None or index.doc_sig is None:
+        raise ValueError("live refresh requires an index built with "
+                         "keep_doc_vectors=True")
+    k = len(appended_docs)
+    if k == 0:
+        return index
+    if index.n_docs + k != corpus.n_docs:
+        raise ValueError(
+            f"appended docs do not line up: index has {index.n_docs}, "
+            f"corpus has {corpus.n_docs}, appended {k}")
+    vecs = pv.infer_doc_vectors(model, appended_docs, cfg,
+                                steps=infer_steps, pause_s=infer_pause_s)
+    if index.center_mean is not None:
+        vecs = _center_and_unit(vecs, index.center_mean)
+    else:
+        vecs = np.asarray(vecs, np.float32)
+    doc_vecs = np.concatenate([index.doc_vecs, vecs])
+    doc_sig = np.concatenate(
+        [index.doc_sig, lsh_mod.sign_vectors_np(vecs, index.planes)])
+
+    old_shards = index.shard_vecs.shape[0]
+    dim = index.shard_vecs.shape[1]
+    shard_vecs = np.zeros((corpus.n_shards, dim), np.float32)
+    shard_vecs[:old_shards] = index.shard_vecs
+    touched = sorted({int(s) for s in affected_shards}
+                     | set(range(old_shards, corpus.n_shards)))
+    for sid in touched:
+        # same op as the build path (pv.shard_vectors: numpy mean over
+        # member doc vectors), so a touched row matches a full rebuild
+        shard_vecs[sid] = doc_vecs[corpus.shards[sid].doc_ids].mean(axis=0)
+    shard_sig = np.zeros((corpus.n_shards, index.shard_sig.shape[1]),
+                         index.shard_sig.dtype)
+    shard_sig[:old_shards] = index.shard_sig
+    if touched:
+        shard_sig[touched] = lsh_mod.sign_vectors_np(
+            shard_vecs[np.asarray(touched)], index.planes)
+
+    doc_freq = index.doc_freq.copy()
+    for tokens in appended_docs:
+        doc_freq[np.unique(np.asarray(tokens, np.int64))] += 1
+
+    attach = (index.granularity == "doc"
+              or index._doc_shard_ids is not None)
+    new = dataclasses.replace(
+        index,
+        doc_vecs=doc_vecs, doc_sig=doc_sig,
+        shard_vecs=shard_vecs, shard_sig=shard_sig,
+        doc_freq=doc_freq, n_docs=corpus.n_docs,
+        avg_doc_len=corpus.n_tokens / max(corpus.n_docs, 1),
+        _doc_shard_ids=corpus.doc_shard_map() if attach else None,
+    )
+    # generation continuity: the new index answers under the same
+    # authority; the ingest swap mints the content bump
+    return new.use_clock(index.clock)

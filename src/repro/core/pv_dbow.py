@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import NamedTuple, Sequence, Tuple
 
 import jax
@@ -224,36 +225,110 @@ def train_pv_dbow(
     return model
 
 
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _split_chain(key: jax.Array, steps: int) -> jax.Array:
+    """The iterated ``key, sub = jax.random.split(key)`` chain as ONE
+    dispatch: [steps, 2] uint32 subkeys, bit-identical to the eager
+    loop (threefry is integer math — no float reassociation risk under
+    fusion).  Inference runs one Python-level jit dispatch per step;
+    without this the eager per-step split roughly doubles the GIL-held
+    work, which is exactly what the live-ingest writer must not do to
+    concurrently serving readers."""
+    def body(k, _):
+        k, sub = jax.random.split(k)
+        return k, sub
+    _, subs = jax.lax.scan(body, key, None, length=steps)
+    return subs
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("negatives", "lr", "temperature"))
+def _infer_step(
+    word_vecs: jax.Array,
+    tokens: jax.Array,
+    vec: jax.Array,
+    key: jax.Array,
+    *,
+    negatives: int,
+    lr: float,
+    temperature: float,
+) -> jax.Array:
+    """One frozen-model inference step (word matrix fixed, one doc
+    vector trained).  Module-level so the compiled program is shared
+    across calls and documents — the ingest path infers whole batches
+    of appended docs, and re-tracing per document would swamp the math
+    (one compile per distinct token count remains)."""
+    def loss_fn(v):
+        w = word_vecs[tokens]
+        pos = w @ v[0] * temperature
+        kneg = jax.random.randint(
+            key, (tokens.shape[0], negatives), 0, word_vecs.shape[0])
+        wn = word_vecs[kneg]
+        neg = jnp.einsum("bkd,d->bk", wn, v[0]) * temperature
+        return jax.nn.softplus(-pos).mean() + jax.nn.softplus(neg).sum(-1).mean()
+    g = jax.grad(loss_fn)(vec)
+    return _unit_rows(vec - lr * g)
+
+
 def infer_doc_vector(
     model: PVDBOWModel,
     tokens: np.ndarray,
     cfg: PVDBOWConfig,
     steps: int = 50,
+    *,
+    pause_s: float = 0.0,
 ) -> jax.Array:
     """Infer a vector for an unseen document with word vectors frozen
-    (paper Sec. V, model-drift mitigation)."""
+    (paper Sec. V, model-drift mitigation).  Deterministic in
+    (cfg.seed, tokens): the rng chain restarts from the config seed for
+    every document, so re-inferring the same tokens always reproduces
+    the same vector.
+
+    ``pause_s`` sleeps between inference steps.  It never changes the
+    result — the rng chain and the math are untouched — it only yields
+    the GIL so a concurrent serving thread is stalled for at most one
+    dispatch, not a whole document.  The live-ingest writer paces
+    itself with it; foreground callers leave it at 0."""
     key = jax.random.PRNGKey(cfg.seed + 1)
     vec = _unit_rows(jax.random.normal(key, (1, cfg.dim), jnp.float32) / np.sqrt(cfg.dim))
     tokens = jnp.asarray(tokens, jnp.int32)
-    vocab = model.word_vecs.shape[0]
-
-    @jax.jit
-    def one(vec, key):
-        def loss_fn(v):
-            w = model.word_vecs[tokens]
-            pos = w @ v[0] * cfg.temperature
-            kneg = jax.random.randint(key, (tokens.shape[0], cfg.negatives), 0, vocab)
-            wn = model.word_vecs[kneg]
-            neg = jnp.einsum("bkd,d->bk", wn, v[0]) * cfg.temperature
-            return jax.nn.softplus(-pos).mean() + jax.nn.softplus(neg).sum(-1).mean()
-        g = jax.grad(loss_fn)(vec)
-        v = vec - cfg.lr * g
-        return _unit_rows(v)
-
-    for _ in range(steps):
-        key, sub = jax.random.split(key)
-        vec = one(vec, sub)
+    word_vecs = jnp.asarray(model.word_vecs)
+    subs = _split_chain(key, steps)
+    for i in range(steps):
+        vec = _infer_step(word_vecs, tokens, vec, subs[i],
+                          negatives=cfg.negatives, lr=cfg.lr,
+                          temperature=cfg.temperature)
+        if pause_s > 0.0:
+            time.sleep(pause_s)
     return vec[0]
+
+
+def infer_doc_vectors(
+    model: PVDBOWModel,
+    docs: Sequence[np.ndarray],
+    cfg: PVDBOWConfig,
+    steps: int = 50,
+    *,
+    pause_s: float = 0.0,
+) -> np.ndarray:
+    """Frozen-model inference for a batch of documents: [len(docs), dim]
+    float32, row ``i`` bit-for-bit equal to
+    ``infer_doc_vector(model, docs[i], cfg, steps)`` (pinned by tests).
+
+    Documents are ragged and the negative draws are shaped by each
+    doc's token count, so padding to a rectangle would change the rng
+    stream and break that equality — instead the batch path shares the
+    jitted ``_infer_step`` across docs (one compile per distinct
+    length).  This is the live-ingest workhorse: appended docs get
+    vectors without touching the trained word matrix; ``pause_s`` is
+    the writer's cooperative GIL yield (see ``infer_doc_vector``)."""
+    if not len(docs):
+        return np.zeros((0, cfg.dim), np.float32)
+    return np.stack([
+        np.asarray(infer_doc_vector(model, d, cfg, steps, pause_s=pause_s),
+                   np.float32)
+        for d in docs
+    ])
 
 
 def query_vector(model_or_words: jax.Array, word_ids: Sequence[int]) -> jax.Array:

@@ -47,9 +47,13 @@ Three serving-side extensions ride on the same machinery:
     near-hits within a Hamming radius reuse the cached sampling plan
     (unbiased for any sampling distribution — Hansen-Hurwitz) while
     re-running the scan + reduce, and misses stay bit-for-bit the
-    uncached path.  Placement-epoch fencing keeps cached plans from
-    crossing fleet generations; degraded and budgeted answers are
-    never cached.
+    uncached path.  Generation fencing (``runtime.generation``: a
+    placement axis bumped by fleet swaps, a content axis bumped by
+    live ingest / ``attach_corpus``) keeps cached plans and estimates
+    from crossing either kind of world change; degraded and budgeted
+    answers are never cached.  ``execute`` captures its corpus/index
+    refs RCU-style at entry, so a concurrent ingest swap never splits
+    a batch across generations and never pauses serving.
 
   * **Per-query error/latency budgets** — construct with a
     ``runtime.budget.RatePlanner`` and queries may carry a
@@ -104,6 +108,7 @@ from repro.data.store import (
     count_phrase_in_shard,
     shard_postings,
 )
+from repro.runtime.generation import Generation
 from repro.runtime.qcache import query_cache_vectors, query_key, sampler_class
 
 
@@ -218,8 +223,10 @@ class QueryBatch:
         if cache is not None and index is None:
             raise ValueError("semantic query cache requires an index "
                              "(its keys are the index's LSH signatures)")
-        self.corpus = corpus
-        self.index = index
+        # the engine's world is ONE tuple so RCU readers capture
+        # (corpus, index) with a single atomic attribute load — a
+        # concurrent ingest swap can never hand a batch a torn pair
+        self._world = (corpus, index)
         self.executor = executor
         self.method = method
         self.confidence = confidence
@@ -241,6 +248,33 @@ class QueryBatch:
         self.cache = cache
         # the typed record of the most recent execute() call
         self.last_report: Optional[ExecutionReport] = None
+
+    # ------------------------------------------------------------------
+    # the world: (corpus, index) behind one atomic reference
+    # ------------------------------------------------------------------
+    @property
+    def corpus(self) -> ShardedCorpus:
+        return self._world[0]
+
+    @corpus.setter
+    def corpus(self, corpus) -> None:
+        self._world = (corpus, self._world[1])
+
+    @property
+    def index(self) -> Optional[ApproxIndex]:
+        return self._world[1]
+
+    @index.setter
+    def index(self, index) -> None:
+        self._world = (self._world[0], index)
+
+    def swap_world(self, corpus, index) -> None:
+        """Publish a new (corpus, index) pair in one store — the RCU
+        write side of live ingest.  Individual ``corpus``/``index``
+        assignment still works but publishes in two stores; a swap
+        that changes both MUST go through here (or a racing reader
+        could capture a torn pair)."""
+        self._world = (corpus, index)
 
     @property
     def accepts_pressure(self) -> bool:
@@ -286,8 +320,12 @@ class QueryBatch:
     # planning: one batched scoring pass -> per-query probability rows
     # ------------------------------------------------------------------
     def _probability_rows(
-            self, queries: Sequence[BatchQuery]) -> List[np.ndarray]:
-        n_shards = self.corpus.n_shards
+            self, queries: Sequence[BatchQuery], corpus: ShardedCorpus,
+            index: Optional[ApproxIndex]) -> List[np.ndarray]:
+        # corpus/index come in as the refs execute() captured at entry
+        # (RCU: a concurrent ingest swap must not split one batch
+        # across two content generations)
+        n_shards = corpus.n_shards
         if self.method == "srcs":
             uniform = np.full(n_shards, 1.0 / n_shards, np.float64)
             return [uniform] * len(queries)
@@ -295,7 +333,7 @@ class QueryBatch:
         vec_pos = [i for i, q in enumerate(queries) if q.kind != "bool"]
         rows: List[Optional[np.ndarray]] = [None] * len(queries)
         if vec_pos:
-            sims = self.index.shard_similarities_batch(
+            sims = index.shard_similarities_batch(
                 [queries[i].word_ids() for i in vec_pos])
             for row, i in zip(sims, vec_pos):
                 rows[i] = similarity_probabilities(row)
@@ -305,7 +343,7 @@ class QueryBatch:
             words = sorted({w for i in bool_pos
                             for w in queries[i].expr.words()})
             word_rows = dict(zip(
-                words, self.index.word_shard_similarities_batch(words)))
+                words, index.word_shard_similarities_batch(words)))
 
             def algebra(e: BoolExpr) -> np.ndarray:
                 if e.op == "word":
@@ -380,7 +418,18 @@ class QueryBatch:
         """
         rng = rng or np.random.default_rng(0)
         t0 = time.perf_counter()
-        n_shards = self.corpus.n_shards
+        # RCU entry: read the generation BEFORE capturing the corpus /
+        # index refs.  The ingest swap publishes new refs first and
+        # bumps the content generation second, so this order can at
+        # worst stamp a new-content result with the old generation (an
+        # entry the very next probe drops) — never the reverse, which
+        # would let an old-content answer serve under the new
+        # generation.  The whole batch then runs against the captured
+        # refs: a concurrent swap never splits one batch across two
+        # content generations.
+        epoch = self._generation() if self.cache is not None else 0
+        corpus, index = self._world
+        n_shards = corpus.n_shards
         n = len(queries)
 
         if self.planner is not None:
@@ -393,12 +442,10 @@ class QueryBatch:
         near: Dict[int, Any] = {}
         cache_meta: Optional[Dict[str, int]] = None
         sigs = qkeys = None
-        epoch = 0
         if self.cache is not None and n:
-            sigs = self.index.query_signatures(
-                query_cache_vectors(self.index, queries))
+            sigs = index.query_signatures(
+                query_cache_vectors(index, queries))
             qkeys = [query_key(q) for q in queries]
-            epoch = self._cache_epoch()
             bypassed = 0
             for i, q in enumerate(queries):
                 if pressure > 0.0 or q.budget is not None:
@@ -430,7 +477,8 @@ class QueryBatch:
             for i in need:
                 samples[i], plan[i] = census, all_ids
         elif need:
-            rows = self._probability_rows([queries[i] for i in need])
+            rows = self._probability_rows(
+                [queries[i] for i in need], corpus, index)
             # aggregation keeps the with-replacement multiset (the
             # Hansen-Hurwitz estimator needs it); retrieval unions docs
             # over the sample, so it draws distinct shards — same
@@ -450,13 +498,13 @@ class QueryBatch:
                               else pps_sample_distinct(row, r, rng))
                 plan[i] = unique_shards(samples[i])
 
-        if self.index is not None:
-            doc_freq = self.index.doc_freq
-            n_docs, avg_len = self.index.n_docs, self.index.avg_doc_len
+        if index is not None:
+            doc_freq = index.doc_freq
+            n_docs, avg_len = index.n_docs, index.avg_doc_len
         else:
-            doc_freq = np.ones(self.corpus.vocab_size, np.int64)
-            n_docs = self.corpus.n_docs
-            avg_len = self.corpus.n_tokens / max(n_docs, 1)
+            doc_freq = np.ones(corpus.vocab_size, np.int64)
+            n_docs = corpus.n_docs
+            avg_len = corpus.n_tokens / max(n_docs, 1)
         fns = [self._shard_fn(q, doc_freq, n_docs, avg_len) for q in queries]
 
         # exact hits scan nothing: their slot in the executed plan is
@@ -468,13 +516,13 @@ class QueryBatch:
             job, balance = None, None
         elif self.executor is not None:
             per_query = self.executor.map_shard_batch(
-                self.corpus, scan_plan, fns)
+                corpus, scan_plan, fns)
             job = getattr(self.executor, "last_job", None)
             balance = (dict(job["balance"])
                        if isinstance(job, dict) and "balance" in job
                        else None)
         else:
-            per_query = self._inline_shared_scan(scan_plan, fns)
+            per_query = self._inline_shared_scan(scan_plan, fns, corpus)
             job, balance = None, None
 
         # partial gather (allow_partial executors only): shards whose
@@ -498,7 +546,7 @@ class QueryBatch:
         results = [
             hits[i].result._replace(elapsed_s=elapsed) if i in hits
             else self._reduce(queries[i], samples[i], plan[i], per_query[i],
-                              elapsed, rates[i] >= 1.0,
+                              elapsed, rates[i] >= 1.0, n_shards,
                               lost=lost_per_query[i])
             for i in range(n)]
 
@@ -523,11 +571,31 @@ class QueryBatch:
             cache=cache_meta)
         return results
 
+    def _generation(self) -> Generation:
+        """The engine's composite ``Generation`` — the fencing value
+        cache entries are stamped with and probed against.
+
+        The *placement* axis comes from the executor's
+        ``GenerationClock`` (every RCU placement swap — fleet
+        join/drain/crash, ingest shard growth — bumps it), falling
+        back to the deprecated ``stats["placement_epoch"]`` view for
+        clock-less executors; executors without placement (single
+        host, inline) are placement 0.  The *content* axis comes from
+        the index's clock (live ingest swaps and ``attach_corpus``
+        bump it) — this is what lets the cache see corpus changes that
+        leave placement untouched."""
+        clock = getattr(self.executor, "clock", None)
+        placement = (clock.current().placement if clock is not None
+                     else self._cache_epoch())
+        content = (self.index.clock.current().content
+                   if self.index is not None else 0)
+        return Generation(placement=placement, content=content)
+
     def _cache_epoch(self) -> int:
-        """The executor's placement generation — every RCU placement
-        swap (fleet join/drain/crash, future ingest) bumps it, fencing
-        cached plans from serving across generations.  Executors
-        without placement (single host, inline) are generation 0."""
+        """Deprecated: the raw placement int read off executor stats.
+        Kept as the fallback placement source for executors predating
+        ``GenerationClock`` — it cannot see content changes, which is
+        why ``_generation`` exists."""
         stats = getattr(self.executor, "stats", None)
         if isinstance(stats, dict):
             return int(stats.get("placement_epoch", 0))
@@ -571,20 +639,22 @@ class QueryBatch:
         self,
         plan: Sequence[np.ndarray],
         fns: Sequence[Callable[[Any], Any]],
+        corpus: ShardedCorpus,
     ) -> List[Dict[int, Any]]:
         """Executor-less fallback: the same union-and-visit-once
-        schedule (``run_shared_scan``), run sequentially in-process."""
+        schedule (``run_shared_scan``), run sequentially in-process
+        over the corpus ref ``execute`` captured at entry."""
         from repro.runtime.executor import run_shared_scan
 
         def inline_mapper(corpus, shard_ids, fn):
             return {sid: fn(corpus.shards[sid]) for sid in shard_ids}
 
-        return run_shared_scan(inline_mapper, self.corpus, plan, fns)
+        return run_shared_scan(inline_mapper, corpus, plan, fns)
 
     def _reduce(self, q: BatchQuery, sample: SampleResult,
                 distinct: np.ndarray, by_shard: Dict[int, Any],
-                elapsed: float, precise: bool, lost: int = 0) -> Any:
-        n_shards = self.corpus.n_shards
+                elapsed: float, precise: bool, n_shards: int,
+                lost: int = 0) -> Any:
         conf = (q.budget.confidence if q.budget is not None
                 else self.confidence)
         if lost:

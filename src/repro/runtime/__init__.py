@@ -26,8 +26,13 @@
                    over the placement layer
   ``qcache``     — the semantic query cache (``SemanticQueryCache``):
                    per-query plans + full results memoized under the
-                   index's own LSH signatures, with TTL /
-                   placement-epoch / LRU invalidation
+                   index's own LSH signatures, with TTL / generation /
+                   LRU invalidation
+  ``generation`` — the single generation authority (``Generation`` +
+                   ``GenerationClock``): one typed (placement,
+                   content) pair replacing the scattered integer
+                   epochs; every placement swap and every content swap
+                   in a stack mints through one shared clock
   ``chaos``      — deterministic fault injection (``FaultPlan``): a
                    seeded, scripted scenario DSL compiled onto the
                    executors' injection seams
@@ -73,11 +78,12 @@ result with zero scoring, zero rng draws, zero scans; a near-hit
 borrows the cached sampling plan — unbiased for any full-support
 distribution, Hansen-Hurwitz — and re-runs only the scan + reduce),
 the window keeps cache-served queries out of the controller's batch
-cost fit (``observe_batch(..., cached=n)``), and every cached plan is
-fenced by the executor's ``placement_epoch`` so no entry survives a
-fleet generation swap.  Degraded, pressured, and budgeted answers are
-never cached — a point-in-time decision must not replay as full
-fidelity.  Cookbook:
+cost fit (``observe_batch(..., cached=n)``), and every cached entry is
+fenced by the engine's composite ``Generation`` — the placement axis
+(fleet swaps) AND the content axis (live ingest, ``attach_corpus``) —
+so no entry survives either kind of world change.  Degraded,
+pressured, and budgeted answers are never cached — a point-in-time
+decision must not replay as full fidelity.  Cookbook:
 
     from repro.launch import build_serving_stack
     stack = build_serving_stack(corpus, index, cache=True,
@@ -137,6 +143,46 @@ residency-transfer path — a drain is a crash you saw coming:
              partial-sample estimates with widened CIs instead of
              failing (they revive if the slot rejoins)
 
+Live ingest rides the same RCU discipline on a second axis.  The
+lifecycle is ingest -> generation -> fence:
+
+  1. **ingest** — ``launch.serve_stack.Ingestor.step(docs)`` builds
+     the appended world off to the side: ``data.store``'s
+     copy-on-write corpus append (postings deltas merge into any
+     built CSR bit-for-bit with a rebuild), then
+     ``core.index.refresh_appended`` (frozen-model PV-DBOW inference
+     for the new docs — paced with result-neutral cooperative GIL
+     yields, ``ingest_yield_s``, so serving threads never stall
+     behind the writer — re-centroid/re-sign only the touched
+     shards).
+  2. **generation** — the new corpus/index refs publish first; only
+     then does the stack's shared ``GenerationClock`` mint
+     ``bump_content()``.  Readers capture (generation, refs) in that
+     order at batch entry, so the one reachable race stamps a *fresh*
+     answer with the *old* generation — immediately fenced, never the
+     reverse.  An append that spills new shards extends the
+     ``PlacementMap`` in place first (old shards keep their hosts;
+     that mints ``bump_placement()`` through the same clock).
+  3. **fence** — the next probe under the new generation lazily drops
+     every entry stamped with the old one (``stats["stale_epoch"]``);
+     in-flight batches finish on the refs they captured.  No lock on
+     the read path, no serving pause.
+
+Cookbook:
+
+    stack = build_serving_stack(
+        corpus, index, cache=True,
+        ingest=True, ingest_model=model, ingest_pv_cfg=pv_cfg,
+        ingest_source=my_feed)           # or None: drive step() by hand
+    stack.ingestor.step(new_docs)        # append + swap, zero pause
+    stack.generation                     # Generation(placement, content)
+    stack.ingestor.record()              # steps/docs/swaps counters
+
+The deprecated integer views (``stats["placement_epoch"]``, raw-int
+qcache epochs) still read correctly — they are mirrors of the clock,
+pinned by tests — but new code should mint and compare only through
+``runtime.generation``.
+
 Every scenario above is testable without wall-clock races via
 ``chaos``: a ``FaultPlan`` is a seeded script compiled onto the
 executors' hooks, its clock the executor's own job counter.  Cookbook:
@@ -183,6 +229,10 @@ from repro.runtime.controller import (  # noqa: F401
 from repro.runtime.chaos import FaultPlan  # noqa: F401
 from repro.runtime.executor import ShardTaskExecutor  # noqa: F401
 from repro.runtime.fleet import FleetManager  # noqa: F401
+from repro.runtime.generation import (  # noqa: F401
+    Generation,
+    GenerationClock,
+)
 from repro.runtime.placement import (  # noqa: F401
     HostFailure,
     HostGroupExecutor,

@@ -96,8 +96,11 @@ class FleetManager:
             drains=ops.count("drain"),
             crashes=ops.count("crash"),
             live_hosts=self.live_hosts(),
+            # read through the one generation authority (the stats key
+            # of the same name is the deprecated mirrored view)
             placement_epoch=int(
-                self.executor.stats["placement_epoch"]),
+                self.executor.clock.current().placement),
+            generation=self.executor.clock.current().record(),
         )
 
     # ------------------------------------------------------------------
@@ -135,7 +138,7 @@ class FleetManager:
                   moved_shards=int(moved), warmed_shards=int(warmed),
                   orphaned_shards=int(orphaned),
                   placement_epoch=int(
-                      self.executor.stats["placement_epoch"]),
+                      self.executor.clock.current().placement),
                   live_hosts=len(self.live_hosts()))
         self.events.append(ev)
         return ev

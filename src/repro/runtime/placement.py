@@ -88,6 +88,7 @@ from repro.runtime.executor import (
     invert_plan,
     run_shared_scan,
 )
+from repro.runtime.generation import GenerationClock
 
 
 class HostFailure(RuntimeError):
@@ -197,6 +198,24 @@ class PlacementMap:
         """Shard ids whose *primary* residency is ``host``."""
         return np.nonzero(self.primary == int(host))[0].astype(np.int64)
 
+    def extend(self, n_shards: int) -> "PlacementMap":
+        """Open-shard residency for live ingest: grow the map to cover
+        newly appended shards without moving any existing one.  New
+        shard ids take round-robin primaries (spreads ingest load) with
+        the same ring-replica count as the rest of the map.  Returns
+        ``self`` when nothing grew, so callers can swap unconditionally."""
+        old = self.n_shards
+        n = int(n_shards)
+        if n < old:
+            raise ValueError(f"cannot shrink placement from {old} to "
+                             f"{n} shards")
+        if n == old:
+            return self
+        new_primary = np.arange(old, n, dtype=np.int64) % self.n_hosts
+        primary = np.concatenate([self.primary, new_primary])
+        return PlacementMap._with_ring_replicas(primary, self.n_hosts,
+                                                self.n_replicas)
+
     def split(self, shard_ids: Sequence[int],
               dead: frozenset = frozenset(), *,
               load=None,
@@ -279,10 +298,15 @@ class HostGroupExecutor:
         balancer: Optional["HostLoadModel"] = None,
         allow_partial: bool = False,
         job_hook: Optional[Callable[[int], None]] = None,
+        clock: Optional[GenerationClock] = None,
         **executor_kw: Any,
     ):
         self.placement = placement
         self.host_fault_hook = host_fault_hook
+        # the one version authority this executor mints placement
+        # generations through; build_serving_stack passes the stack's
+        # shared clock so cache/index/ingestor fence on the same handle
+        self.clock = clock if clock is not None else GenerationClock()
         # group-level degraded serving: a shard whose primary and every
         # replica are dead (or down) is *lost* — recorded on stats /
         # last_job — instead of raising HostFailure.  Deliberately NOT
@@ -313,7 +337,11 @@ class HostGroupExecutor:
         self.stats: Dict[str, Any] = {
             "jobs": 0, "host_jobs": 0, "host_failures": 0,
             "requeued_shards": 0, "shed_shards": 0,
-            "lost_shards": 0, "placement_epoch": 0,
+            "lost_shards": 0,
+            # deprecated read-only view of clock.current().placement
+            # (pre-generation callers; pinned by tests) — never bumped
+            # directly, only mirrored after a clock mint
+            "placement_epoch": self.clock.current().placement,
             "scans_per_host": [0] * placement.n_hosts,
         }
         self.last_job: Optional[Dict[str, Any]] = None
@@ -363,7 +391,8 @@ class HostGroupExecutor:
         if self.balancer is not None:
             self.balancer.ensure_hosts(placement.n_hosts)
         self.placement = placement
-        self.stats["placement_epoch"] += 1
+        # the clock is the mint; stats carries the deprecated view
+        self.stats["placement_epoch"] = self.clock.bump_placement().placement
 
     # ------------------------------------------------------------------
     # coordinator pool (one slot per host; warm across jobs)

@@ -9,7 +9,7 @@ the packed SimHash signature of the query's composed scoring vector.
 Three outcomes per probe:
 
   **hit**   — same signature, same query key (kind + words/expr + k),
-              same effective sampling rate, same placement epoch, not
+              same effective sampling rate, same generation, not
               expired.  The engine returns the memoized full result
               (estimate + CI included) with zero scoring, zero rng
               draws, and zero shard scans — the p50 collapse under
@@ -35,14 +35,18 @@ Three outcomes per probe:
 
 Invalidation is layered:
 
-  * **epoch** — every entry records the executor's placement
-    generation (``stats["placement_epoch"]``).  ``FleetManager``
-    join/drain/crash all install a new placement RCU-style, bumping
-    the epoch — so a cached plan from the old fleet can never serve
-    the new one; stale entries are dropped lazily at probe time
-    (counted in ``stats["stale_epoch"]``).  Future live ingest gets
-    the same fencing for free: bump the epoch, the cache empties
-    itself.
+  * **generation** — every entry records the engine's
+    ``runtime.generation.Generation`` at insert: the *placement* axis
+    (``FleetManager`` join/drain/crash all install a new placement
+    RCU-style) AND the *content* axis (live ingest swaps / a corpus
+    ``attach_corpus``).  A probe under any other generation drops the
+    entry lazily (counted in ``stats["stale_epoch"]``) — a cached plan
+    from the old fleet can never serve the new one, and a cached
+    *estimate* computed over the old corpus can never answer a query
+    over the new one.  The cache itself only ever compares epochs for
+    equality, so the deprecated raw-int probe (pre-generation callers
+    passing ``stats["placement_epoch"]``) keeps working verbatim —
+    but it cannot see content changes; that gap was the PR-10 bugfix.
   * **TTL** — wall-clock expiry per entry (``ttl_s``).
   * **LRU** — ``max_entries`` bound, least-recently-used evicted.
 
@@ -143,13 +147,13 @@ class _Entry:
         self.sample = sample    # core.sampling.SampleResult (the plan)
         self.plan = plan        # distinct sampled shard ids [k]
         self.result = result    # full memoized result (estimate + CI)
-        self.epoch = epoch      # placement/index generation at insert
+        self.epoch = epoch      # Generation (or deprecated int) at insert
         self.born = born
 
 
 class SemanticQueryCache:
     """LSH-signature-keyed memo of (plan, distribution, result) per
-    query, with TTL + placement-epoch invalidation and an LRU bound.
+    query, with TTL + generation invalidation and an LRU bound.
 
     Not thread-safe by design: the engine probes and populates it from
     within ``QueryBatch.execute``, which the ``BatchWindow`` dispatcher
@@ -171,8 +175,10 @@ class SemanticQueryCache:
     # ------------------------------------------------------------------
     # probe
     # ------------------------------------------------------------------
-    def _valid(self, e: _Entry, epoch: int, now: float) -> bool:
-        """Drop-on-probe validation; counts the reason."""
+    def _valid(self, e: _Entry, epoch, now: float) -> bool:
+        """Drop-on-probe validation; counts the reason.  ``epoch`` is a
+        ``Generation`` (equality compares both axes) or a deprecated
+        raw int — the cache only needs ``!=``."""
         if e.epoch != epoch:
             del self._entries[e.key]
             self.stats["stale_epoch"] += 1
@@ -184,8 +190,11 @@ class SemanticQueryCache:
         return True
 
     def lookup(self, sig: np.ndarray, qkey: Tuple, sampler: str,
-               rate: float, epoch: int) -> Tuple[str, Optional[_Entry]]:
-        """("hit" | "near" | "miss", entry-or-None) for one query."""
+               rate: float, epoch) -> Tuple[str, Optional[_Entry]]:
+        """("hit" | "near" | "miss", entry-or-None) for one query.
+
+        ``epoch`` is the probing engine's ``Generation`` (or a
+        deprecated raw placement int, still accepted)."""
         now = self._clock()
         key = (sig.tobytes(), qkey, float(rate))
         e = self._entries.get(key)
@@ -215,11 +224,14 @@ class SemanticQueryCache:
     # ------------------------------------------------------------------
     def insert(self, sig: np.ndarray, qkey: Tuple, sampler: str,
                rate: float, *, probs: Optional[np.ndarray], sample,
-               plan: np.ndarray, result: Any, epoch: int) -> None:
+               plan: np.ndarray, result: Any, epoch) -> None:
         key = (sig.tobytes(), qkey, float(rate))
+        # the epoch is stored as handed in (Generation or deprecated
+        # int) — validation is pure equality, so no coercion is needed
+        # and int-era callers keep their exact semantics
         self._entries[key] = _Entry(
             key, np.asarray(sig, np.uint32), sampler, float(rate),
-            probs, sample, plan, result, int(epoch), self._clock())
+            probs, sample, plan, result, epoch, self._clock())
         self._entries.move_to_end(key)
         self.stats["insertions"] += 1
         while len(self._entries) > self.config.max_entries:
@@ -229,7 +241,7 @@ class SemanticQueryCache:
     # ------------------------------------------------------------------
     # maintenance / introspection
     # ------------------------------------------------------------------
-    def purge(self, epoch: Optional[int] = None) -> int:
+    def purge(self, epoch=None) -> int:
         """Eagerly drop expired (and, given ``epoch``, stale) entries;
         returns how many were dropped."""
         now = self._clock()
